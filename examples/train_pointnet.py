@@ -1,0 +1,79 @@
+"""End-to-end driver: train PointNet++ (paper Model 0) on the synthetic
+ModelNet40-like dataset for a few hundred steps.
+
+Exercises: data pipeline -> JAX model -> AdamW -> checkpointing ->
+preemption-safe loop. Accuracy on 40 synthetic classes rises well above
+chance within ~200 steps on CPU.
+
+Run:  PYTHONPATH=src python examples/train_pointnet.py [--steps 200]
+"""
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_checkpoint
+from repro.core import PAPER_MODELS
+from repro.data import PointCloudDataset
+from repro.launch.fault import GracefulShutdown, StragglerWatchdog
+from repro.models import pointnet2 as pn
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--points", type=int, default=256,
+                    help="points per cloud (256 keeps CPU steps fast; "
+                         "the paper's deployment uses 1024)")
+    ap.add_argument("--ckpt", default="/tmp/pointer_pointnet_ckpt")
+    args = ap.parse_args()
+
+    cfg0 = PAPER_MODELS["model0"]
+    # reduced cloud for CPU walltime; same architecture
+    import dataclasses
+    cfg = dataclasses.replace(
+        cfg0, n_points=args.points,
+        layers=(dataclasses.replace(cfg0.layers[0], n_centers=128),
+                dataclasses.replace(cfg0.layers[1], n_centers=32)))
+    opt_cfg = AdamWConfig(lr=1e-3, total_steps=args.steps, warmup_steps=20,
+                          weight_decay=0.01)
+    params = pn.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params, opt_cfg)
+    data = PointCloudDataset(n_points=args.points, n_clouds=512)
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def step(params, opt, clouds, labels):
+        (loss, acc), grads = jax.value_and_grad(
+            lambda p: pn.loss_fn(p, cfg, clouds, labels), has_aux=True
+        )(params)
+        params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
+        return params, opt, loss, acc
+
+    shutdown = GracefulShutdown()
+    watchdog = StragglerWatchdog()
+    batches = data.batches(args.batch, args.steps)
+    t0 = time.time()
+    for i, (clouds, labels) in enumerate(batches):
+        watchdog.start_step()
+        params, opt, loss, acc = step(params, opt, jnp.asarray(clouds),
+                                      jnp.asarray(labels))
+        watchdog.end_step(i)
+        if i % 20 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss={float(loss):.4f} "
+                  f"acc={float(acc):.3f} ({time.time()-t0:.0f}s)")
+        if shutdown.requested:
+            break
+    save_checkpoint(args.ckpt, i + 1, {"params": params, "opt": opt},
+                    meta={"arch": "pointnet2-model0"})
+    print(f"final acc={float(acc):.3f}; checkpoint saved to {args.ckpt}"
+          f" (chance = 0.025)")
+    if watchdog.flagged_steps:
+        print(f"stragglers flagged: {len(watchdog.flagged_steps)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .checkpoint import (latest_step, restore_checkpoint, save_checkpoint,
+                         cleanup_old)
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "cleanup_old"]

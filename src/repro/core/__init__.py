@@ -1,0 +1,30 @@
+"""Pointer's primary contribution, in framework form.
+
+- ``workload``  : PointNet++ workload description (FPS/kNN geometry, Table-1 configs)
+- ``schedule``  : Algorithm 1 — intra-layer reordering + inter-layer coordination
+- ``buffer``    : on-chip buffer models (FIFO / LRU / Belady oracle)
+- ``reram``     : ReRAM crossbar functional + capacity model (2-bit cells, INT8)
+- ``energy``    : hardware constants (1 GHz, DDR3 8 GB/s, 9 KB SRAM, ISAAC/CACTI)
+- ``simulator`` : trace-driven cycle/energy simulator reproducing Figs. 7-10
+"""
+from .workload import (PAPER_MODELS, PointNetConfig, PointNetWorkload,
+                       SALayerSpec, farthest_point_sample_np, knn_np)
+from .schedule import (ExecutionPlan, MODE_PRESETS, build_plan,
+                       greedy_nn_order, morton_order, coordinate_layers)
+from .buffer import BufferModel, BeladyBuffer
+from .energy import DEFAULT_HW, HWParams
+from .reram import (CrossbarMapping, bit_slice, crossbar_matmul,
+                    map_mlp_to_arrays, quantize_weights)
+from .simulator import DESIGN_POINTS, SimResult, run_design, simulate
+
+__all__ = [
+    "PAPER_MODELS", "PointNetConfig", "PointNetWorkload", "SALayerSpec",
+    "farthest_point_sample_np", "knn_np",
+    "ExecutionPlan", "MODE_PRESETS", "build_plan", "greedy_nn_order",
+    "morton_order", "coordinate_layers",
+    "BufferModel", "BeladyBuffer",
+    "DEFAULT_HW", "HWParams",
+    "CrossbarMapping", "bit_slice", "crossbar_matmul", "map_mlp_to_arrays",
+    "quantize_weights",
+    "DESIGN_POINTS", "SimResult", "run_design", "simulate",
+]

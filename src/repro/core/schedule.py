@@ -1,0 +1,172 @@
+"""Scheduling Order Generation (paper Algorithm 1) + beyond-paper variants.
+
+The scheduler is pure host-side logic — in the Pointer accelerator this is
+the small "order generator" unit in the front-end (Fig. 6, orange); here it
+produces an ``ExecutionPlan`` consumed by
+  * the cycle/energy simulator (``repro.core.simulator``), and
+  * the JAX/Pallas execution path (gather orders for the ``aggregate``
+    kernel in ``repro.kernels``).
+
+Three scheduling levers (orthogonal, matching the paper's ablation):
+  intra-layer order of the LAST layer:
+      'index'    — point-index order (paper baseline / Pointer-1 / Pointer-12)
+      'greedy'   — topology-aware greedy nearest-neighbor chain
+                   (paper Algorithm 1 lines 1-8; the full Pointer)
+      'morton'   — beyond-paper: space-filling-curve (Morton/Z-order) order.
+                   Same goal as 'greedy' (consecutive points spatially close)
+                   but O(n log n) and with no chain-jump pathology.
+  inter-layer coordination (paper Algorithm 1 lines 9-13):
+      off — layer-by-layer execution (previous SA layer fully completes),
+      on  — receptive-field-by-receptive-field execution: a last-layer point
+            runs as soon as every member of its pyramid receptive field has
+            been produced; members shared between consecutive fields are
+            computed once and re-fetched from the on-chip buffer.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Literal, Sequence
+
+import numpy as np
+
+from .workload import PointNetWorkload
+
+__all__ = [
+    "ExecutionPlan",
+    "greedy_nn_order",
+    "morton_order",
+    "coordinate_layers",
+    "build_plan",
+    "MODE_PRESETS",
+]
+
+IntraMode = Literal["index", "greedy", "morton"]
+
+
+@dataclass
+class ExecutionPlan:
+    """orders[k-1]: execution order (point indices) of layer k (k=1..L).
+    trace: the interleaved execution sequence [(layer, point_idx), ...] —
+    Eq. (1)/(2) of the paper. Each point appears exactly once.
+    """
+
+    orders: list[np.ndarray]
+    trace: list[tuple[int, int]]
+    intra: str
+    coordinated: bool
+
+    def order_of(self, layer: int) -> np.ndarray:
+        return self.orders[layer - 1]
+
+
+def greedy_nn_order(points: np.ndarray, start: int = 0) -> np.ndarray:
+    """Paper Algorithm 1, lines 1-8: repeatedly append the unscheduled point
+    nearest to the last scheduled one. O(n^2) with a vectorized inner step —
+    n is the last layer's size (128 in the paper), so this is tiny; the
+    hardware order generator reuses distances already computed by FPS."""
+    n = points.shape[0]
+    if n == 0:
+        return np.empty(0, dtype=np.int64)
+    remaining = np.ones(n, dtype=bool)
+    order = np.empty(n, dtype=np.int64)
+    cur = int(start)
+    for i in range(n):
+        order[i] = cur
+        remaining[cur] = False
+        if i == n - 1:
+            break
+        d = np.sum((points - points[cur]) ** 2, axis=1)
+        d[~remaining] = np.inf
+        cur = int(np.argmin(d))
+    return order
+
+
+def _interleave_bits(v: np.ndarray, nbits: int) -> np.ndarray:
+    out = np.zeros(v.shape[0], dtype=np.uint64)
+    for b in range(nbits):
+        out |= ((v[:, 0].astype(np.uint64) >> b) & 1) << np.uint64(3 * b + 2)
+        out |= ((v[:, 1].astype(np.uint64) >> b) & 1) << np.uint64(3 * b + 1)
+        out |= ((v[:, 2].astype(np.uint64) >> b) & 1) << np.uint64(3 * b)
+    return out
+
+
+def morton_order(points: np.ndarray, nbits: int = 10) -> np.ndarray:
+    """Beyond-paper: order points along a Morton (Z-order) space-filling
+    curve. Unlike the greedy chain it cannot "strand" far-away points for
+    the end of the order, and it needs no O(n^2) search."""
+    lo = points.min(axis=0, keepdims=True)
+    hi = points.max(axis=0, keepdims=True)
+    q = ((points - lo) / np.maximum(hi - lo, 1e-12) * (2**nbits - 1)).astype(
+        np.uint64)
+    return np.argsort(_interleave_bits(q, nbits), kind="stable")
+
+
+def coordinate_layers(workload: PointNetWorkload,
+                      last_order: np.ndarray) -> ExecutionPlan:
+    """Paper Algorithm 1, lines 9-13 (+ the dedup described in §3.2): walk
+    the last layer in ``last_order``; recursively schedule each point's
+    receptive-field members in lower layers immediately before it, skipping
+    members already executed ("they only need to be calculated once")."""
+    L = workload.n_layers
+    done = [np.zeros(workload.points[k].shape[0], dtype=bool)
+            for k in range(L + 1)]
+    orders: list[list[int]] = [[] for _ in range(L + 1)]
+    trace: list[tuple[int, int]] = []
+
+    def execute(layer: int, i: int) -> None:
+        if done[layer][i]:
+            return
+        if layer > 1:
+            for m in workload.neighbors[layer][i]:
+                execute(layer - 1, int(m))
+        done[layer][i] = True
+        orders[layer].append(i)
+        trace.append((layer, i))
+
+    for j in last_order:
+        execute(L, int(j))
+    return ExecutionPlan(
+        orders=[np.asarray(orders[k], dtype=np.int64) for k in range(1, L + 1)],
+        trace=trace, intra="?", coordinated=True)
+
+
+def _layer_by_layer(workload: PointNetWorkload,
+                    last_order: np.ndarray) -> ExecutionPlan:
+    """No coordination: each SA layer completes before the next begins.
+    Lower layers run in index order (paper §3.1); the last layer runs in
+    ``last_order`` (index order for the baseline / Pointer-1 / Pointer-12)."""
+    L = workload.n_layers
+    orders = [np.arange(workload.points[k].shape[0], dtype=np.int64)
+              for k in range(1, L + 1)]
+    orders[L - 1] = np.asarray(last_order, dtype=np.int64)
+    trace = [(k, int(i)) for k in range(1, L + 1) for i in orders[k - 1]]
+    return ExecutionPlan(orders=orders, trace=trace, intra="?",
+                         coordinated=False)
+
+
+def build_plan(workload: PointNetWorkload, *, intra: IntraMode = "index",
+               coordinated: bool = False, start: int = 0) -> ExecutionPlan:
+    last_pts = workload.points[workload.n_layers]
+    if intra == "index":
+        last_order = np.arange(last_pts.shape[0], dtype=np.int64)
+    elif intra == "greedy":
+        last_order = greedy_nn_order(last_pts, start=start)
+    elif intra == "morton":
+        last_order = morton_order(last_pts)
+    else:
+        raise ValueError(f"unknown intra mode {intra!r}")
+    plan = (coordinate_layers(workload, last_order) if coordinated
+            else _layer_by_layer(workload, last_order))
+    plan.intra = intra
+    return plan
+
+
+#: Paper design points: ``(intra, coordinated)``.
+MODE_PRESETS: dict[str, dict] = {
+    "baseline":   dict(intra="index", coordinated=False),  # MARS-like / Pointer-1 order
+    "pointer-1":  dict(intra="index", coordinated=False),
+    "pointer-12": dict(intra="index", coordinated=True),
+    "pointer":    dict(intra="greedy", coordinated=True),
+    # beyond-paper
+    "pointer-morton": dict(intra="morton", coordinated=True),
+}

@@ -1,0 +1,6 @@
+"""Data pipelines: synthetic ModelNet40-like point clouds and LM token
+streams (the container is offline; loaders accept real data when present)."""
+from .pointcloud import PointCloudDataset, synthetic_cloud
+from .tokens import TokenStream
+
+__all__ = ["PointCloudDataset", "synthetic_cloud", "TokenStream"]

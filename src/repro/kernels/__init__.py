@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the compute hot-spots the paper optimizes.
+
+- ``reram_mlp``  : bit-sliced weight-stationary INT8 matmul (contribution 1)
+- ``aggregate``  : scalar-prefetch neighbor gather + difference (the
+                   irregular access that contributions 2/3 optimize)
+- ``fps_update`` : FPS distance relaxation (front-end hot loop)
+
+Every kernel has a pure-jnp oracle in ``ref.py`` and a jit'd public wrapper
+in ``ops.py``; they are validated on CPU with ``interpret=True`` and target
+TPU (BlockSpec VMEM tiling, 128-aligned) for deployment.
+"""
+from .ops import (aggregate_diff, count_dma_elisions, encode_planes, fps,
+                  fps_update, on_tpu, quantize_tensor, reram_linear)
+from .reram_mlp import reram_matmul_int
+
+__all__ = [
+    "aggregate_diff", "count_dma_elisions", "encode_planes", "fps",
+    "fps_update", "on_tpu", "quantize_tensor", "reram_linear",
+    "reram_matmul_int",
+]

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each function computes the same result as its kernel with plain jnp ops;
+tests sweep shapes/dtypes and ``assert_allclose`` kernel vs oracle.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["ref_reram_matmul_int", "ref_aggregate_diff", "ref_fps_update",
+           "combine_planes"]
+
+
+def combine_planes(planes: jnp.ndarray, cell_bits: int = 2,
+                   weight_bits: int = 8) -> jnp.ndarray:
+    """Recombine offset-binary cell planes into signed integer weights."""
+    p = planes.astype(jnp.int32)
+    shifts = jnp.array([1 << (cell_bits * i) for i in range(p.shape[0])],
+                       dtype=jnp.int32)
+    u = jnp.tensordot(shifts, p, axes=(0, 0))
+    return u - (1 << (weight_bits - 1))
+
+
+def ref_reram_matmul_int(x_int: jnp.ndarray, planes: jnp.ndarray,
+                         cell_bits: int = 2,
+                         weight_bits: int = 8) -> jnp.ndarray:
+    w = combine_planes(planes, cell_bits, weight_bits)
+    return x_int.astype(jnp.int32) @ w
+
+
+def ref_aggregate_diff(features: jnp.ndarray, nbr_idx: jnp.ndarray,
+                       ctr_idx: jnp.ndarray) -> jnp.ndarray:
+    return features[nbr_idx] - features[ctr_idx][:, None, :]
+
+
+def ref_fps_update(points_t: jnp.ndarray, centroid: jnp.ndarray,
+                   dist: jnp.ndarray) -> jnp.ndarray:
+    d = jnp.sum((points_t - centroid) ** 2, axis=0, keepdims=True)
+    return jnp.minimum(dist, d)

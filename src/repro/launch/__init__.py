@@ -1,0 +1,2 @@
+"""Distributed runtime: production mesh, sharding rules, trainer, server,
+multi-pod dry-run, roofline analysis, fault tolerance."""

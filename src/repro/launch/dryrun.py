@@ -1,0 +1,254 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell on the production meshes and extract memory / cost / collective
+analyses for EXPERIMENTS.md §Dry-run and §Roofline.
+
+MUST be run as its own process (``python -m repro.launch.dryrun``): the
+first two lines above force 512 host platform devices BEFORE jax
+initializes — smoke tests and benches must never import this module.
+
+Per cell:
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., out_shardings=...)\
+                      .lower(*input_specs(arch, shape))
+        compiled = lowered.compile()
+        compiled.memory_analysis(); compiled.cost_analysis()
+        parse_collectives(compiled.as_text())
+
+Results are cached as JSON under --out (default experiments/dryrun); use
+--force to recompile.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, get_config, input_specs
+from repro.launch import hlo_analysis as ha
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.launch.train import init_train_state, make_train_step
+from repro.models import lm
+from repro.optim import AdamWConfig
+
+MESHES = {"single": dict(multi_pod=False), "multi": dict(multi_pod=True)}
+
+
+def prod_cfg(name: str, *, extra: dict | None = None):
+    cfg = get_config(name)
+    over = dict(tp=16, dtype="bfloat16", remat=True)
+    over.update(extra or {})
+    return dataclasses.replace(cfg, **over)
+
+
+def planned_cells(include_quadratic_long: bool = False):
+    cells = []
+    for arch in sorted(ARCHS):
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            if (shape.name == "long_500k" and not cfg.sub_quadratic
+                    and not include_quadratic_long):
+                cells.append((arch, shape.name, "SKIP-quadratic"))
+                continue
+            cells.append((arch, shape.name, "run"))
+    return cells
+
+
+def _steps_for(cfg, shape, mesh):
+    """-> (fn, example_args, in_shardings, out_shardings, donate)."""
+    specs = input_specs(cfg, shape.name)
+    batch_sp = shd.input_pspecs(specs, mesh)
+    params_shapes = jax.eval_shape(
+        lambda: lm.init(jax.random.PRNGKey(0), cfg))
+    param_sp = shd.param_pspecs(params_shapes, mesh)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(moment_dtype=cfg.opt_moment_dtype)
+        state_shapes = jax.eval_shape(
+            lambda: init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg))
+        state_sp = shd.state_pspecs(state_shapes, mesh)
+        fn = make_train_step(cfg, opt_cfg)
+        return (fn, (state_shapes, specs), (state_sp, batch_sp),
+                (state_sp, None), (0,))
+
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            return lm.prefill(params, cfg, batch.get("ids"),
+                              embeds=batch.get("embeds"),
+                              image_embeds=batch.get("image_embeds"))
+        return (fn, (params_shapes, specs), (param_sp, batch_sp),
+                None, ())
+
+    def fn(params, batch):
+        logits, cache = lm.decode_step(
+            params, cfg, batch["cache"], ids1=batch.get("ids1"),
+            pos=batch["pos"], embeds1=batch.get("embeds1"),
+            image_embeds=batch.get("image_embeds"))
+        return logits, cache
+    return (fn, (params_shapes, specs), (param_sp, batch_sp),
+            None, (1,))
+
+
+def _memory_dict(compiled):
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:   # pragma: no cover
+        return {"error": repr(e)}
+    if ma is None:
+        return {"unavailable": True}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    args = out.get("argument_size_in_bytes", 0)
+    alias = out.get("alias_size_in_bytes", 0)
+    outb = out.get("output_size_in_bytes", 0)
+    temp = out.get("temp_size_in_bytes", 0)
+    out["resident_bytes"] = args + temp + max(0, outb - alias)
+    out["fits_16gb"] = out["resident_bytes"] <= ha.HBM_PER_CHIP
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
+             *, force: bool = False, include_text: bool = False,
+             cfg_extra: dict | None = None, tag: str = "") -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}"
+                        + (f"__{tag}" if tag else "") + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = prod_cfg(arch, extra=cfg_extra)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(**MESHES[mesh_name])
+    chips = int(np.prod(list(mesh.shape.values())))
+    # pin activation batch sharding when the global batch divides the DP
+    # axes (long_500k's batch=1 stays unconstrained -> sequence parallel)
+    dp_axes = tuple(a for a in mesh.axis_names if a != "model")
+    n_dp = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    if shape.global_batch % n_dp == 0 and "batch_axes" not in (cfg_extra or {}):
+        cfg = dataclasses.replace(cfg, batch_axes=dp_axes, dp_shards=n_dp)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "chips": chips, "ok": False, "tag": tag}
+    t0 = time.monotonic()
+    try:
+        with mesh:
+            fn, args, in_sp, out_sp, donate = _steps_for(cfg, shape, mesh)
+            jitted = jax.jit(
+                fn,
+                in_shardings=shd.named_shardings(in_sp, mesh),
+                out_shardings=(shd.named_shardings(out_sp, mesh)
+                               if out_sp is not None else None),
+                donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.monotonic() - t0
+            compiled = lowered.compile()
+            t_compile = time.monotonic() - t0 - t_lower
+            mem = _memory_dict(compiled)
+            try:
+                cost_list = compiled.cost_analysis()
+                cost = cost_list[0] if isinstance(cost_list, list) \
+                    else dict(cost_list)
+            except Exception as e:
+                cost = {"error": repr(e)}
+            text = compiled.as_text()
+            hlo = ha.analyze_hlo(text)
+            xla_flops = float(cost.get("flops", 0.0))
+            xla_bytes = float(cost.get("bytes accessed", 0.0))
+            # trip-count-corrected analyzer is primary (XLA cost analysis
+            # counts while bodies once — see hlo_analysis docstring)
+            flops_dev = max(hlo["flops"], xla_flops)
+            bytes_dev = max(hlo["bytes"], xla_bytes)
+            mf = ha.model_flops(cfg, shape)
+            roof = ha.roofline(
+                flops_per_device=flops_dev, bytes_per_device=bytes_dev,
+                collective_bytes_per_device=float(hlo["total_bytes"]),
+                chips=chips, model_flops_global=mf)
+            rec.update(ok=True, lower_s=t_lower, compile_s=t_compile,
+                       memory=mem,
+                       cost={"flops_per_device": flops_dev,
+                             "bytes_per_device": bytes_dev,
+                             "xla_flops_per_device": xla_flops,
+                             "xla_bytes_per_device": xla_bytes},
+                       collectives={"bytes_by_op": hlo["bytes_by_op"],
+                                    "counts": hlo["counts"],
+                                    "total_bytes": hlo["total_bytes"]},
+                       scan_trip_counts=hlo["trip_counts"],
+                       roofline=roof, hlo_bytes=len(text))
+            if include_text:
+                with open(path.replace(".json", ".hlo.txt"), "w") as f:
+                    f.write(text)
+    except Exception as e:
+        rec.update(error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    rec["total_s"] = time.monotonic() - t0
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--include-quadratic-long", action="store_true",
+                    help="also compile long_500k decode for full-attention "
+                         "archs (decode is O(S); compiles fine)")
+    ap.add_argument("--include-text", action="store_true",
+                    help="dump optimized HLO text next to the JSON")
+    args = ap.parse_args(argv)
+
+    cells = planned_cells(args.include_quadratic_long)
+    if args.list:
+        for c in cells:
+            print(*c)
+        return 0
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    failures = 0
+    for arch, shape_name, status in cells:
+        if args.arch not in ("all", arch):
+            continue
+        if args.shape not in ("all", shape_name):
+            continue
+        if status.startswith("SKIP"):
+            print(f"[dryrun] {arch} x {shape_name}: {status} "
+                  "(see DESIGN.md §5)")
+            continue
+        for mesh_name in meshes:
+            rec = run_cell(arch, shape_name, mesh_name, args.out,
+                           force=args.force, include_text=args.include_text)
+            if rec["ok"]:
+                r = rec["roofline"]
+                m = rec["memory"]
+                print(f"[dryrun] OK {arch} x {shape_name} x {mesh_name}: "
+                      f"compile={rec.get('compile_s', 0):.0f}s "
+                      f"resident={m.get('resident_bytes', 0)/2**30:.2f}GiB "
+                      f"bottleneck={r['bottleneck']} "
+                      f"terms(c/m/x)={r['compute_s']:.2e}/"
+                      f"{r['memory_s']:.2e}/{r['collective_s']:.2e}s")
+            else:
+                failures += 1
+                print(f"[dryrun] FAIL {arch} x {shape_name} x {mesh_name}: "
+                      f"{rec['error']}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

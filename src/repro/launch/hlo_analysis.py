@@ -1,0 +1,386 @@
+"""Roofline analysis from compiled dry-run artifacts (EXPERIMENTS.md
+§Roofline).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(constants given by the assignment).
+
+Sources:
+  * ``compiled.cost_analysis()``  -> HLO FLOPs / bytes accessed. XLA's
+    HloCostAnalysis counts each instruction ONCE — ops inside a while/scan
+    body are NOT multiplied by trip count, so for scan-over-layers models
+    the raw numbers undercount by ~n_layers. We therefore report both the
+    raw counts and a trip-count-corrected estimate, and compute the
+    MODEL_FLOPS / HLO_FLOPs "useful compute" ratio against the corrected
+    value (the correction factor is recorded per cell).
+  * ``compiled.as_text()``        -> per-device optimized HLO; collective
+    bytes are summed over all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute result types (per-device, post-SPMD).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["HW", "parse_collectives", "roofline", "model_flops",
+           "scan_trip_counts"]
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # B/s / chip
+LINK_BW = 50e9            # B/s / ICI link
+HBM_PER_CHIP = 16 * 1024**3
+HW = dict(peak_flops=PEAK_FLOPS, hbm_bw=HBM_BW, link_bw=LINK_BW,
+          hbm_bytes=HBM_PER_CHIP)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _TYPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class _Instr:
+    name: str
+    result_type: str
+    opcode: str
+    operands: list          # operand instruction names
+    attrs: str
+    is_root: bool = False
+
+
+_LINE_RE = re.compile(
+    r"^\s+(ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s+"
+    r"([\w\-]+)\((.*)$")
+
+
+def _parse_computations(hlo_text: str) -> dict:
+    """computation name -> list of _Instr (with per-comp symbol tables via
+    instruction names; optimized HLO does not inline operand types)."""
+    comps: dict[str, list] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace():
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*[.(]?", line)
+            if m and ("{" in line or "(" in line):
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if cur is None:
+            continue
+        m = _LINE_RE.match(line)
+        if not m:
+            continue
+        root, name, rtype, opcode, rest = m.groups()
+        oper_str = rest.split(")")[0]
+        operands = re.findall(r"%([\w.\-]+)", oper_str)
+        if not operands:   # un-%-prefixed operand names
+            operands = [t.strip() for t in oper_str.split(",") if t.strip()]
+        comps[cur].append(_Instr(name, rtype, opcode, operands, rest,
+                                 is_root=bool(root)))
+    return comps
+
+
+def _symbols(instrs) -> dict:
+    return {i.name: i.result_type for i in instrs}
+
+
+_SLICE_OPS = ("dynamic-slice", "slice", "gather")
+# dtype-conversion / layout ops that XLA:CPU inserts when legalizing bf16
+# (a TPU executes these fused/natively) — traced through when attributing
+# reads/writes, so CPU-only f32 convert wrappers don't inflate the model.
+_PASS_THROUGH = ("convert", "bitcast", "bitcast-convert", "copy", "reshape")
+
+
+def _fusion_io_bytes(body: list, symbols_body: dict) -> tuple:
+    """Effective HBM (read, write) bytes of one fusion execution.
+
+    A fusion that dynamic-slices a big parameter only reads the slice; a
+    fusion whose root dynamic-update-slices into a big buffer only writes
+    the update (in-place). Convert/bitcast chains (CPU bf16 legalization)
+    are traced through. Everything else reads/writes full operand/result
+    buffers — mirrors XLA buffer-utilization accounting and keeps decode
+    caches (10 GB buffers, 1-token in-place writes) sane."""
+    consumers: dict[str, list] = {}
+    by_name = {i.name: i for i in body}
+    for ins in body:
+        for oi, o in enumerate(ins.operands):
+            consumers.setdefault(o, []).append((ins, oi))
+
+    def effective_consumers(name, depth=0):
+        out = []
+        for c, oi in consumers.get(name, []):
+            if c.opcode in _PASS_THROUGH and depth < 8:
+                nxt = effective_consumers(c.name, depth + 1)
+                out.extend(nxt if nxt else [(c, oi)])
+            else:
+                out.append((c, oi))
+        return out
+
+    read = 0
+    for ins in body:
+        if ins.opcode != "parameter":
+            continue
+        cons = effective_consumers(ins.name)
+        if cons and all(c.opcode == "dynamic-update-slice" and oi == 0
+                        for c, oi in cons):
+            continue   # in-place DUS destination: aliased, not read
+        if cons and all(c.opcode in _SLICE_OPS for c, _ in cons):
+            read += sum(min(_type_bytes(c.result_type),
+                            _type_bytes(ins.result_type))
+                        for c, _ in cons)
+        else:
+            read += _type_bytes(ins.result_type)
+
+    def unwrap(ins, depth=0):
+        while ins.opcode in _PASS_THROUGH and ins.operands and depth < 8:
+            nxt = by_name.get(ins.operands[0])
+            if nxt is None:
+                break
+            ins = nxt
+            depth += 1
+        return ins
+
+    def write_bytes(ins) -> int:
+        ins = unwrap(ins)
+        if ins.opcode == "dynamic-update-slice" and len(ins.operands) >= 2:
+            upd = by_name.get(ins.operands[1])
+            t = (symbols_body.get(ins.operands[1], "") if upd is None
+                 else unwrap(upd).result_type)
+            return _type_bytes(t)
+        return _type_bytes(ins.result_type)
+
+    root = next((i for i in body if i.is_root), body[-1] if body else None)
+    if root is None:
+        return read, 0
+    if root.opcode == "tuple":
+        write = sum(write_bytes(by_name.get(o, root))
+                    for o in root.operands)
+    else:
+        write = write_bytes(root)
+    return read, write
+
+
+def _loop_multipliers(hlo_text: str, comps: dict) -> dict:
+    """computation -> execution multiplier (product of enclosing loops'
+    trip counts). Covers while body/condition and called computations."""
+    # direct edges: computation -> (callee, multiplier)
+    trip_re = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+    edge: dict[str, list] = {c: [] for c in comps}
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            text = ins.attrs
+            for m in re.finditer(r"(body|condition|to_apply|calls)="
+                                 r"\{?%?([\w.\-]+)", text):
+                kind, callee = m.groups()
+                mult = 1
+                if kind in ("body", "condition"):
+                    tm = trip_re.search(text)
+                    mult = int(tm.group(1)) if tm else 1
+                if callee in comps:
+                    edge[cname].append((callee, mult))
+    # propagate from the entry computations (never called by anyone);
+    # HLO call graphs are DAGs, so a max-relaxation fixpoint terminates.
+    called = {c for lst in edge.values() for c, _ in lst}
+    mult: dict[str, int] = {c: (1 if c not in called else 0) for c in comps}
+    for _ in range(len(comps) + 1):
+        changed = False
+        for c, lst in edge.items():
+            for callee, em in lst:
+                cand = mult[c] * em
+                if cand > mult.get(callee, 0):
+                    mult[callee] = cand
+                    changed = True
+        if not changed:
+            break
+    return {c: max(1, m) for c, m in mult.items()}
+
+
+_DOT_DIM_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _dims(type_str: str) -> list:
+    m = _TYPE_RE.search(type_str)
+    return [int(d) for d in m.group(2).split(",") if d] if m else []
+
+
+def _dot_flops(ins: _Instr, symbols: dict) -> float:
+    """2 * prod(result dims) * prod(contracting dims of lhs)."""
+    rdims = _dims(ins.result_type)
+    lhs_type = symbols.get(ins.operands[0], "") if ins.operands else ""
+    ldims = _dims(lhs_type)
+    cm = _DOT_DIM_RE.search(ins.attrs)
+    k = 1
+    if cm and cm.group(1):
+        for i in cm.group(1).split(","):
+            k *= ldims[int(i)] if int(i) < len(ldims) else 1
+    out = 1
+    for d in rdims:
+        out *= d
+    return 2.0 * out * k
+
+
+def analyze_hlo(hlo_text: str) -> dict:
+    """Trip-count-aware per-device analysis of optimized HLO:
+      flops            — dot/convolution FLOPs x loop multipliers
+      bytes            — operand+result bytes of top-level (fusion-boundary)
+                         instructions x multipliers ~ HBM traffic
+      collective bytes — result bytes of all-gather/all-reduce/
+                         reduce-scatter/all-to-all/collective-permute
+                         (``-start`` counted once, ``-done`` skipped)
+    XLA's own cost_analysis() counts while bodies once; this analyzer
+    multiplies by ``known_trip_count`` (scan-over-layers correctness)."""
+    comps = _parse_computations(hlo_text)
+    mult = _loop_multipliers(hlo_text, comps)
+    # fusion bodies: internals never touch HBM
+    fusion_bodies = set()
+    fusion_of: dict[str, str] = {}   # fusion instr name -> body comp
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            if ins.opcode == "fusion":
+                for m in re.finditer(r"calls=\{?%?([\w.\-]+)", ins.attrs):
+                    fusion_bodies.add(m.group(1))
+                    fusion_of[f"{cname}:{ins.name}"] = m.group(1)
+    flops = 0.0
+    bytes_total = 0.0
+    per_op = {k: 0 for k in _COLL_OPS}
+    counts = {k: 0 for k in _COLL_OPS}
+    trip_counts = []
+    by_opcode_bytes: dict[str, float] = {}
+    _NO_TRAFFIC = ("parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "while", "conditional", "after-all",
+                   "partition-id", "replica-id", "iota")
+    for cname, instrs in comps.items():
+        m = mult.get(cname, 1)
+        in_fusion = cname in fusion_bodies
+        symbols = _symbols(instrs)
+        for ins in instrs:
+            op = ins.opcode
+            if op.endswith("-done"):
+                continue
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLL_OPS:
+                per_op[base] += _type_bytes(ins.result_type) * m
+                counts[base] += m
+            if op in ("dot", "convolution"):
+                flops += _dot_flops(ins, symbols) * m
+            if op == "while":
+                tm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}',
+                               ins.attrs)
+                if tm:
+                    trip_counts.append(int(tm.group(1)))
+            if not in_fusion and op not in _NO_TRAFFIC:
+                # HBM traffic model: writes (result) + reads (operands) at
+                # fusion boundaries, x loop multipliers; fusions charged by
+                # their effective (slice-aware) I/O
+                body = comps.get(fusion_of.get(f"{cname}:{ins.name}", ""),
+                                 None)
+                if op == "fusion" and body:
+                    rd, wr = _fusion_io_bytes(body, _symbols(body))
+                    b = (rd + wr) * m
+                else:
+                    b = (_type_bytes(ins.result_type)
+                         + sum(_type_bytes(symbols.get(o, ""))
+                               for o in ins.operands)) * m
+                bytes_total += b
+                by_opcode_bytes[op] = by_opcode_bytes.get(op, 0.0) + b
+    return {"flops": flops, "bytes": bytes_total,
+            "bytes_by_op": per_op, "counts": counts,
+            "total_bytes": sum(per_op.values()),
+            "trip_counts": trip_counts,
+            "hbm_bytes_by_opcode": by_opcode_bytes}
+
+
+def scan_trip_counts(hlo_text: str) -> list[int]:
+    return [int(m.group(1)) for m in
+            re.finditer(r'"known_trip_count":\{"n":"(\d+)"\}', hlo_text)]
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    return analyze_hlo(hlo_text)
+
+
+def roofline(*, flops_per_device: float, bytes_per_device: float,
+             collective_bytes_per_device: float, chips: int,
+             model_flops_global: float) -> dict:
+    """Three roofline terms (seconds) + bottleneck + useful-compute ratio."""
+    t_compute = flops_per_device / PEAK_FLOPS
+    t_memory = bytes_per_device / HBM_BW
+    t_collective = collective_bytes_per_device / LINK_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    bottleneck = max(terms, key=terms.get)
+    hlo_flops_global = flops_per_device * chips
+    return {
+        **terms,
+        "bottleneck": bottleneck.replace("_s", ""),
+        "model_flops_global": model_flops_global,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_ratio": (model_flops_global / hlo_flops_global
+                         if hlo_flops_global else float("nan")),
+        "bound_step_time_s": max(terms.values()),
+        "roofline_fraction": (
+            t_compute / max(terms.values()) if max(terms.values()) else 0.0),
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS for one step of (arch, shape):
+       train   : 6 * N_active * tokens  + attention term
+       prefill : 2 * N_active * tokens  + attention term
+       decode  : 2 * N_active * batch   + cache-read attention term
+    Attention term (causal): 2 * 2 * 0.5 * L_attn * S^2 * H * Dh * B per
+    forward; x3 for train (fwd+bwd). SSM/RWKV state math adds
+    ~10 * B*S*H*K*V per layer (projections already in N)."""
+    n_act = cfg.n_active_params()
+    s, b = shape.seq_len, shape.global_batch
+    tokens = s * b
+    h, dh = cfg.eff_heads, cfg.head_dim
+    if cfg.family == "hybrid":
+        l_attn = cfg.n_layers // cfg.attn_interval
+    elif cfg.family == "ssm":
+        l_attn = 0
+    elif cfg.family == "vlm":
+        l_attn = cfg.n_layers  # + cross handled below
+    else:
+        l_attn = cfg.n_layers
+
+    def attn_fwd(ctx):
+        return 2.0 * ctx * h * dh * l_attn  # per query token, qk+pv, causal
+
+    extra = 0.0
+    if cfg.family == "vlm":
+        g = cfg.n_layers // cfg.cross_attn_interval
+        extra = 4.0 * cfg.n_image_tokens * h * dh * g   # per query token
+    if cfg.family in ("hybrid", "ssm"):
+        hs = 64 if cfg.family == "hybrid" else cfg.head_size
+        nh = (2 * cfg.d_model // 64 if cfg.family == "hybrid"
+              else cfg.d_model // cfg.head_size)
+        state_n = cfg.ssm_state if cfg.family == "hybrid" else hs
+        extra += 10.0 * nh * hs * state_n * cfg.n_layers
+
+    if shape.kind == "train":
+        return 6.0 * n_act * tokens + 3.0 * tokens * (attn_fwd(s / 2) + extra)
+    if shape.kind == "prefill":
+        return 2.0 * n_act * tokens + tokens * (attn_fwd(s / 2) + extra)
+    # decode: context = full cache
+    return 2.0 * n_act * b + b * (attn_fwd(s) + extra)

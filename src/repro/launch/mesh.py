@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+A function, not a module-level constant: importing this module must never
+touch jax device state (device count is frozen at first backend init, and
+smoke tests / benches must see 1 CPU device while the dry-run sees 512).
+
+Axes:
+  single-pod : (16, 16)       ('data', 'model')    = 256 chips (v5e pod)
+  multi-pod  : (2, 16, 16)    ('pod', 'data', 'model') = 512 chips
+
+'pod' is the cross-pod (DCN) axis: data-parallel by default, pipeline
+parallel via ``repro.launch.pipeline``. Scaling to N pods is the same mesh
+with shape (N, 16, 16).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh", "batch_axes",
+           "MESH_AXES"]
+
+MESH_AXES = {"single": ("data", "model"), "multi": ("pod", "data", "model")}
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> jax.sharding.Mesh:
+    """Small mesh for unit tests (requires xla_force_host_platform_device_count
+    set in the test's subprocess)."""
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh: jax.sharding.Mesh):
+    """The mesh axes a batch dimension shards over (pod+data when present)."""
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))

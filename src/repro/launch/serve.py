@@ -1,0 +1,70 @@
+"""Batched serving: prefill + sampled decode loop.
+
+``generate`` is the building block (used by examples/serve_lm.py and the
+integration tests); ``serve_step`` — a single jit'd decode step over a
+cache — is exactly what the dry-run lowers for the decode_32k / long_500k
+shapes.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+
+__all__ = ["make_serve_step", "generate"]
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, cache, ids1, pos, *, image_embeds=None,
+                   embeds1=None):
+        return lm.decode_step(params, cfg, cache, ids1=ids1, pos=pos,
+                              embeds1=embeds1, image_embeds=image_embeds)
+    return serve_step
+
+
+def generate(params, cfg: ArchConfig, prompts: jnp.ndarray, *,
+             max_new_tokens: int = 32, temperature: float = 0.0,
+             key=None, image_embeds=None, verbose: bool = False):
+    """prompts (B, S) int32 -> (B, S + max_new_tokens) with timing stats."""
+    b, s = prompts.shape
+    key = key if key is not None else jax.random.PRNGKey(0)
+    t0 = time.monotonic()
+    logits, cache = jax.jit(
+        partial(lm.prefill, cfg=cfg, max_seq=s + max_new_tokens)
+    )(params, ids=prompts, image_embeds=image_embeds) \
+        if image_embeds is not None else jax.jit(
+        lambda p, i: lm.prefill(p, cfg, i, max_seq=s + max_new_tokens)
+    )(params, prompts)
+    jax.block_until_ready(logits)
+    t_prefill = time.monotonic() - t0
+
+    step = jax.jit(make_serve_step(cfg))
+
+    def sample(lg, k):
+        if temperature <= 0.0:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(k, lg / temperature).astype(jnp.int32)
+
+    toks = [sample(logits, key)]
+    t1 = time.monotonic()
+    for i in range(max_new_tokens - 1):
+        key, sub = jax.random.split(key)
+        lg, cache = step(params, cache, toks[-1][:, None],
+                         jnp.int32(s + i),
+                         image_embeds=image_embeds)
+        toks.append(sample(lg, sub))
+    jax.block_until_ready(toks[-1])
+    t_decode = time.monotonic() - t1
+    out = jnp.concatenate([prompts, jnp.stack(toks, axis=1)], axis=1)
+    stats = {"prefill_s": t_prefill,
+             "decode_tok_per_s": b * max_new_tokens / max(t_decode, 1e-9),
+             "decode_s": t_decode}
+    if verbose:
+        print(f"[serve] prefill {t_prefill*1e3:.1f} ms, "
+              f"{stats['decode_tok_per_s']:.1f} tok/s")
+    return out, stats

@@ -1,0 +1,131 @@
+"""Training: state, step function, and the fault-tolerant loop.
+
+``make_train_step`` builds the pure pjit-able step (loss -> grads ->
+[optional int8 error-feedback compression] -> AdamW). ``run_training`` is
+the driver used by the end-to-end examples and tests: data pipeline,
+checkpoint/resume, SIGTERM-safe preemption, straggler watchdog.
+
+The same step function is what the multi-pod dry-run lowers at production
+shapes — there is exactly one training code path.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import (latest_step, restore_checkpoint,
+                              save_checkpoint)
+from repro.configs.base import ArchConfig
+from repro.data.tokens import TokenStream
+from repro.models import lm
+from repro.optim import (AdamWConfig, CompressionState, adamw_init,
+                         adamw_update, compress_error_feedback)
+from .fault import GracefulShutdown, StragglerWatchdog
+
+__all__ = ["TrainLoopConfig", "make_train_step", "init_train_state",
+           "run_training"]
+
+
+@dataclass
+class TrainLoopConfig:
+    steps: int = 100
+    batch_size: int = 8
+    seq_len: int = 128
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    grad_compression: bool = False
+    seed: int = 0
+
+
+def init_train_state(key, cfg: ArchConfig, opt_cfg: AdamWConfig,
+                     *, grad_compression: bool = False):
+    params = lm.init(key, cfg)
+    state = {"params": params, "opt": adamw_init(params, opt_cfg)}
+    if grad_compression:
+        state["comp_err"] = CompressionState.init(params).error
+    return state
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig,
+                    *, grad_compression: bool = False):
+    def step_fn(state, batch):
+        def loss_f(params):
+            return lm.loss_fn(params, cfg, batch.get("ids"),
+                              batch["labels"], embeds=batch.get("embeds"),
+                              image_embeds=batch.get("image_embeds"))
+        (_, metrics), grads = jax.value_and_grad(
+            loss_f, has_aux=True)(state["params"])
+        new_state = dict(state)
+        if grad_compression:
+            # the lossy transport of the cross-pod reduction, with error
+            # feedback carried in the train state
+            grads, comp = compress_error_feedback(
+                grads, CompressionState(error=state["comp_err"]))
+            new_state["comp_err"] = comp.error
+        params, opt, om = adamw_update(state["params"], grads,
+                                       state["opt"], opt_cfg)
+        new_state["params"] = params
+        new_state["opt"] = opt
+        metrics = dict(metrics, **om)
+        return new_state, metrics
+    return step_fn
+
+
+def run_training(cfg: ArchConfig, loop: TrainLoopConfig,
+                 opt_cfg: AdamWConfig | None = None, *,
+                 data=None, resume: bool = True, verbose: bool = True):
+    """Single-host driver (the examples' entry point). Returns the metrics
+    history. Preemption-safe: SIGTERM checkpoints and exits cleanly;
+    restart resumes from the latest step."""
+    opt_cfg = opt_cfg or AdamWConfig(total_steps=loop.steps,
+                                     warmup_steps=max(1, loop.steps // 20))
+    key = jax.random.PRNGKey(loop.seed)
+    state = init_train_state(key, cfg, opt_cfg,
+                             grad_compression=loop.grad_compression)
+    start = 0
+    if resume and latest_step(loop.ckpt_dir) is not None:
+        state, start, meta = restore_checkpoint(loop.ckpt_dir, state)
+        if verbose:
+            print(f"[train] resumed from step {start}")
+
+    step_fn = jax.jit(make_train_step(
+        cfg, opt_cfg, grad_compression=loop.grad_compression),
+        donate_argnums=(0,))
+    if data is None:
+        stream = TokenStream(cfg.vocab_size, loop.seq_len, loop.batch_size,
+                             seed=loop.seed)
+        data = (lambda step: dict(zip(("ids", "labels"),
+                                      map(jnp.asarray, stream.batch(step)))))
+
+    shutdown = GracefulShutdown()
+    watchdog = StragglerWatchdog()
+    history = []
+    for step in range(start, loop.steps):
+        watchdog.start_step()
+        batch = data(step)
+        state, metrics = step_fn(state, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        slow = watchdog.end_step(step)
+        history.append(metrics)
+        if verbose and (step % loop.log_every == 0 or slow):
+            flag = " [STRAGGLER]" if slow else ""
+            print(f"[train] step {step} loss={metrics['loss']:.4f} "
+                  f"lr={metrics['lr']:.2e}{flag}")
+        if (step + 1) % loop.ckpt_every == 0 or shutdown.requested:
+            save_checkpoint(loop.ckpt_dir, step + 1, state, keep=loop.keep,
+                            meta={"arch": cfg.name})
+            if shutdown.requested:
+                if verbose:
+                    print(f"[train] preempted at step {step + 1}; "
+                          "checkpointed, exiting cleanly")
+                break
+    shutdown.restore()
+    return history, state, watchdog

@@ -1,0 +1,2 @@
+"""Model definitions: PointNet++ (the paper's workload) and the assigned
+LM architecture family (dense / GQA / MoE / Mamba2 / RWKV6 / cross-attn)."""

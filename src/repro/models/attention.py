@@ -1,0 +1,236 @@
+"""Attention: RoPE, chunked (flash-style) causal attention for train/prefill,
+and cache-based decode attention.
+
+Chunked attention never materializes the (Sq, Skv) score matrix: an online-
+softmax scan over KV chunks (inner) nested in a scan over Q chunks (outer).
+This is what makes 32k-token prefill fit per-device HBM. GQA is handled by
+repeating KV *per chunk* (never the full tensor).
+
+Decode attention is a plain einsum over the cache: with the cache sequence
+dimension sharded (long-context serving), XLA's SPMD partitioner inserts the
+max/sum all-reduces of the distributed softmax automatically — a sequence-
+parallel flash-decode without manual collectives.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["apply_rope", "chunked_attention", "decode_attention"]
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 1e4) -> jnp.ndarray:
+    """x (B, S, H, D); positions (S,) or (B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x1 * sin + x2 * cos], axis=-1)
+
+
+def _repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    if groups == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, groups, d)
+                            ).reshape(b, s, h * groups, d)
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      q_positions: jnp.ndarray, kv_positions: jnp.ndarray,
+                      causal: bool = True, q_chunk: int = 512,
+                      kv_chunk: int = 1024) -> jnp.ndarray:
+    """q (B,Sq,H,D); k,v (B,Skv,Hkv,D); positions (Sq,)/(Skv,) int32.
+    Returns (B, Sq, H, D).
+
+    Flash-attention with a custom VJP: the backward pass RECOMPUTES the
+    score chunks instead of saving the (Sq, Skv) probabilities that plain
+    autodiff-through-scan would stash per layer (measured 2.9 TB/device of
+    residual traffic on qwen1.5-0.5b train_4k — EXPERIMENTS.md §Perf T1).
+    fp32 softmax state, input-dtype output.
+    """
+    b, sq, h, d = q.shape
+    _, skv, hkv, _ = k.shape
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, skv)
+    pad_q = (-sq) % qc
+    pad_k = (-skv) % kc
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, (0, pad_q))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad_k),
+                               constant_values=jnp.iinfo(jnp.int32).max)
+    kv_valid = jnp.arange(skv + pad_k) < skv
+    out = _flash(q, k, v, q_positions.astype(jnp.int32),
+                 kv_positions.astype(jnp.int32), kv_valid, causal, qc, kc)
+    return out[:, :sq]
+
+
+def _chunks(x, n, c):
+    """(B, n*c, H, D) -> (n, B, c, H, D)."""
+    b, _, h, d = x.shape
+    return x.reshape(b, n, c, h, d).transpose(1, 0, 2, 3, 4)
+
+
+def _mask_for(qp_blk, kp_blk, kv_blk, causal, qc, kc):
+    if causal:
+        return qp_blk[:, None] >= kp_blk[None, :]
+    return jnp.broadcast_to(kv_blk[None, :], (qc, kc))
+
+
+def _flash_fwd_scan(q, k, v, qp, kp, kvld, causal, qc, kc):
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    hkv = k.shape[2]
+    groups = h // hkv
+    nq, nk = sq // qc, skv // kc
+    scale = d ** -0.5
+    q_, k_, v_ = _chunks(q, nq, qc), _chunks(k, nk, kc), _chunks(v, nk, kc)
+    qps, kps = qp.reshape(nq, qc), kp.reshape(nk, kc)
+    kvlds = kvld.reshape(nk, kc)
+
+    def q_block(carry, qi):
+        q_blk, qp_blk = qi
+
+        def kv_block(state, ki):
+            m, l, acc = state
+            k_blk, v_blk, kp_blk, kv_blk = ki
+            k_rep = _repeat_kv(k_blk, groups)
+            v_rep = _repeat_kv(v_blk, groups)
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_rep,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _mask_for(qp_blk, kp_blk, kv_blk, causal, qc, kc)
+            s = jnp.where(mask[None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+            p = jnp.where(jnp.isneginf(s), 0.0, jnp.exp(s - m_safe[..., None]))
+            corr = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_safe))
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v_rep.dtype), v_rep,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr.transpose(0, 2, 1)[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, qc), jnp.float32)
+        a0 = jnp.zeros((b, qc, h, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0),
+                                      (k_, v_, kps, kvlds))
+        denom = jnp.maximum(l, 1e-30)
+        out_blk = (acc / denom.transpose(0, 2, 1)[..., None]).astype(q.dtype)
+        lse = jnp.where(l > 0, m + jnp.log(denom), -jnp.inf)   # (B,H,qc)
+        return carry, (out_blk, lse)
+
+    _, (out, lse) = jax.lax.scan(q_block, None, (q_, qps))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, d)
+    lse = lse.transpose(1, 2, 0, 3).reshape(b, h, sq)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7, 8))
+def _flash(q, k, v, qp, kp, kvld, causal, qc, kc):
+    out, _ = _flash_fwd_scan(q, k, v, qp, kp, kvld, causal, qc, kc)
+    return out
+
+
+def _flash_fwd(q, k, v, qp, kp, kvld, causal, qc, kc):
+    out, lse = _flash_fwd_scan(q, k, v, qp, kp, kvld, causal, qc, kc)
+    return out, (q, k, v, qp, kp, kvld, out, lse)
+
+
+def _flash_bwd(causal, qc, kc, res, dout):
+    import numpy as np
+    q, k, v, qp, kp, kvld, out, lse = res
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    groups = h // hkv
+    nq, nk = sq // qc, skv // kc
+    scale = d ** -0.5
+    q_, do_ = _chunks(q, nq, qc), _chunks(dout, nq, qc)
+    k_, v_ = _chunks(k, nk, kc), _chunks(v, nk, kc)
+    qps, kps = qp.reshape(nq, qc), kp.reshape(nk, kc)
+    kvlds = kvld.reshape(nk, kc)
+    # D_i = sum_d dout_i * out_i  (B,H,Sq) fp32
+    dsum = jnp.einsum("bqhd,bqhd->bhq", dout.astype(jnp.float32),
+                      out.astype(jnp.float32))
+    dsum_ = dsum.reshape(b, h, nq, qc).transpose(2, 0, 1, 3)   # (nq,B,H,qc)
+    lse_ = lse.reshape(b, h, nq, qc).transpose(2, 0, 1, 3)
+
+    def kv_block(dq_acc, ki):
+        k_blk, v_blk, kp_blk, kv_blk = ki
+        k_rep = _repeat_kv(k_blk, groups)
+        v_rep = _repeat_kv(v_blk, groups)
+
+        def q_block(state, qi):
+            dk_c, dv_c = state
+            q_blk, do_blk, ds_blk, lse_blk, qp_blk = qi
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_rep,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _mask_for(qp_blk, kp_blk, kv_blk, causal, qc, kc)
+            lse_safe = jnp.where(jnp.isneginf(lse_blk), 0.0, lse_blk)
+            p = jnp.where(mask[None, None],
+                          jnp.exp(s - lse_safe[..., None]), 0.0)
+            dv_c = dv_c + jnp.einsum("bhqk,bqhd->bkhd", p,
+                                     do_blk.astype(jnp.float32))
+            dp = jnp.einsum("bqhd,bkhd->bhqk", do_blk, v_rep,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - ds_blk[..., None]) * scale
+            dq_blk = jnp.einsum("bhqk,bkhd->bqhd", ds,
+                                k_rep.astype(jnp.float32))
+            dk_c = dk_c + jnp.einsum("bhqk,bqhd->bkhd", ds,
+                                     q_blk.astype(jnp.float32))
+            return (dk_c, dv_c), dq_blk
+
+        z = jnp.zeros((b, kc, h, d), jnp.float32)
+        (dk_c, dv_c), dq_chunks = jax.lax.scan(
+            q_block, (z, z), (q_, do_, dsum_, lse_, qps))
+        dq_acc = dq_acc + dq_chunks.transpose(1, 0, 2, 3, 4
+                                              ).reshape(b, sq, h, d)
+        return dq_acc, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((b, sq, h, d), jnp.float32)
+    dq, (dk_r, dv_r) = jax.lax.scan(kv_block, dq0,
+                                    (k_, v_, kps, kvlds))
+    # (nk,B,kc,H,D) -> (B,Skv,H,D); then fold GQA groups back onto Hkv
+    fold = lambda t: t.transpose(1, 0, 2, 3, 4).reshape(b, skv, h, d)
+    dk_full, dv_full = fold(dk_r), fold(dv_r)
+    if groups > 1:
+        dk_full = dk_full.reshape(b, skv, hkv, groups, d).sum(axis=3)
+        dv_full = dv_full.reshape(b, skv, hkv, groups, d).sum(axis=3)
+    f0 = lambda a: np.zeros(a.shape, jax.dtypes.float0)
+    return (dq.astype(q.dtype), dk_full.astype(k.dtype),
+            dv_full.astype(v.dtype), f0(qp), f0(kp), f0(kvld))
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+    """q (B,1,H,D); caches (B,S,Hkv,D); ``pos`` scalar int32 = index of the
+    current token (attends to cache positions <= pos)."""
+    b, _, h, d = q.shape
+    _, s, hkv, _ = k_cache.shape
+    groups = h // hkv
+    scale = d ** -0.5
+    qh = q[:, 0].reshape(b, hkv, groups, d)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qh, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    mask = (jnp.arange(s) <= pos)[None, None, None, :]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", w.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)

@@ -1,0 +1,75 @@
+"""Shared transformer building blocks (pure JAX, pytree params).
+
+Conventions:
+  * params are plain dicts of jnp arrays; stacked along a leading layer axis
+    for ``lax.scan`` (init via ``jax.vmap`` over per-layer keys);
+  * activations (B, S, D); attention heads (B, S, H, Dh);
+  * computation dtype follows the input; params stored in ``cfg.dtype``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "layer_norm", "dense_init", "linear", "mlp_init",
+           "mlp_apply", "embed_init"]
+
+
+def rms_norm(x, gamma, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * gamma.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+            ).astype(dt)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, *, bias: bool = False,
+               scale: float | None = None):
+    s = (1.0 / d_in) ** 0.5 if scale is None else scale
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * s
+               ).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype, *, kind: str = "swiglu"):
+    """``kind`` is config state, not a pytree leaf — pass it to mlp_apply."""
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {"gate": dense_init(ks[0], d_model, d_ff, dtype),
+                "up": dense_init(ks[1], d_model, d_ff, dtype),
+                "down": dense_init(ks[2], d_ff, d_model, dtype)}
+    if kind == "gelu":
+        return {"up": dense_init(ks[0], d_model, d_ff, dtype),
+                "down": dense_init(ks[1], d_ff, d_model, dtype)}
+    raise ValueError(kind)
+
+
+def mlp_apply(p, x, kind: str = "swiglu"):
+    if kind == "swiglu":
+        h = jax.nn.silu(linear(p["gate"], x)) * linear(p["up"], x)
+    else:
+        h = jax.nn.gelu(linear(p["up"], x))
+    return linear(p["down"], h)
+
+
+def embed_init(key, vocab: int, d_model: int, dtype):
+    return {"w": (jax.random.normal(key, (vocab, d_model), jnp.float32)
+                  * 0.02).astype(dtype)}

@@ -1,0 +1,716 @@
+"""Composable decoder-only LM covering all assigned architecture families.
+
+Families (``cfg.family``):
+  dense  — GQA transformer (qwen1.5-*, deepseek-7b, mistral-nemo-12b)
+  moe    — GQA attention + sort-based MoE FFN (llama4-scout, grok-1)
+  audio  — decoder over EnCodec frame embeddings (musicgen-large; LN+GELU)
+  vlm    — dense + cross-attention to image embeddings every
+           ``cross_attn_interval`` layers (llama-3.2-vision-11b)
+  hybrid — Mamba2 backbone + one *shared* attention block applied every
+           ``attn_interval`` layers (zamba2-7b)
+  ssm    — RWKV6 time-mix + channel-mix (rwkv6-3b)
+
+Design rules:
+  * stacked layer params + ``lax.scan`` (small HLO, fast multi-pod compiles);
+  * params are exactly the assigned architecture (no padded weights);
+    TP divisibility is handled at *apply* time: query heads are zero-padded
+    and KV heads repeated up to the TP degree — o_proj ignores padded heads,
+    so outputs are bit-identical to the unpadded model (DESIGN.md §4);
+  * three entry points per model: ``forward`` (train), ``prefill``
+    (build cache), ``decode_step`` (one token, O(1)/O(S) per family);
+  * fp32 softmax/scan numerics inside bf16 models.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import rwkv as rk
+from . import ssm
+from .attention import apply_rope, chunked_attention, decode_attention
+from .layers import (dense_init, embed_init, layer_norm, linear, mlp_apply,
+                     mlp_init, rms_norm)
+from .moe import moe_apply, moe_init
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _norm(p, x, cfg):
+    if cfg.norm == "rms":
+        return rms_norm(x, p["g"], cfg.norm_eps)
+    return layer_norm(x, p["g"], p["b"], cfg.norm_eps)
+
+
+def _norm_init(cfg, d=None):
+    d = d or cfg.d_model
+    p = {"g": jnp.ones((d,), cfg.jdtype)}
+    if cfg.norm == "ln":
+        p["b"] = jnp.zeros((d,), cfg.jdtype)
+    return p
+
+
+def _head_perm(cfg):
+    eff, _, _, slots = cfg.head_layout()
+    perm = [cfg.n_heads] * eff            # n_heads = the zero pad slot
+    for i, sl in enumerate(slots):
+        perm[sl] = i
+    return tuple(perm)
+
+
+def _arrange_wq(w, cfg):
+    """q/o projection weights -> TP head layout. Done on WEIGHTS, not
+    activations: permuting the (sharded) head axis of activations costs a
+    cross-shard gather of (B,S,H,D) per layer (measured 1.2 TB/device of
+    attention-loop all-reduce on llama4-scout train_4k — §Perf M2);
+    arranging the (d, H*dh) weight is ~40x smaller and grads flow back to
+    the exact published parameters (pad-slot grads are dropped)."""
+    eff, _, _, slots = cfg.head_layout()
+    if eff == cfg.n_heads:
+        return w
+    dh = cfg.head_dim
+    d = w.shape[0]
+    w3 = w.reshape(d, cfg.n_heads, dh)
+    w3 = jnp.concatenate([w3, jnp.zeros((d, 1, dh), w.dtype)], axis=1)
+    return w3[:, _head_perm(cfg), :].reshape(d, eff * dh)
+
+
+def _arrange_wq_bias(b, cfg):
+    eff, _, _, slots = cfg.head_layout()
+    if eff == cfg.n_heads:
+        return b
+    dh = cfg.head_dim
+    b3 = b.reshape(cfg.n_heads, dh)
+    b3 = jnp.concatenate([b3, jnp.zeros((1, dh), b.dtype)], axis=0)
+    return b3[_head_perm(cfg), :].reshape(eff * dh)
+
+
+def _arrange_wkv(w, cfg):
+    """k/v projection weights -> eff_kv heads (contiguous repeat for GQA,
+    zero-pad for MHA)."""
+    _, eff_kv, r, _ = cfg.head_layout()
+    if eff_kv == cfg.n_kv_heads:
+        return w
+    dh = cfg.head_dim
+    d = w.shape[0]
+    w3 = w.reshape(d, cfg.n_kv_heads, dh)
+    if r > 1:
+        w3 = jnp.repeat(w3, r, axis=1)
+    else:
+        pad = jnp.zeros((d, eff_kv - cfg.n_kv_heads, dh), w.dtype)
+        w3 = jnp.concatenate([w3, pad], axis=1)
+    return w3.reshape(d, eff_kv * dh)
+
+
+def _arrange_wo(w, cfg):
+    """(Hq*dh, d) o-projection -> (eff*dh, d); pad slots are zero rows, so
+    garbage in padded attention heads never reaches the residual."""
+    eff, _, _, slots = cfg.head_layout()
+    if eff == cfg.n_heads:
+        return w
+    dh = cfg.head_dim
+    d = w.shape[1]
+    w3 = w.reshape(cfg.n_heads, dh, d)
+    w3 = jnp.concatenate([w3, jnp.zeros((1, dh, d), w.dtype)], axis=0)
+    return w3[_head_perm(cfg), :, :].reshape(eff * dh, d)
+
+
+def _wshard(w, cfg, spec_dims):
+    """Re-pin the sharding of an ARRANGED weight. The arrange reshape
+    (d, H*dh) -> (d, H, dh) misaligns the original 'model' sharding when H
+    doesn't divide tp, and without the constraint XLA replicates the whole
+    attention head dimension (llama4: 48 heads/device instead of 3, 12 GiB
+    boolean masks — §Perf M4). The arranged layout IS tp-aligned."""
+    if not cfg.batch_axes:
+        return w
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(w, P(*spec_dims))
+
+
+def _eff_attn_params(p, cfg):
+    """Attention params in the TP head layout (identity fast-path when the
+    arch's heads already divide the TP degree)."""
+    eff, eff_kv, _, _ = cfg.head_layout()
+    if eff == cfg.n_heads and eff_kv == cfg.n_kv_heads:
+        return p
+    q = {"w": _wshard(_arrange_wq(p["q"]["w"], cfg), cfg, (None, "model"))}
+    if "b" in p["q"]:
+        q["b"] = _wshard(_arrange_wq_bias(p["q"]["b"], cfg), cfg,
+                         ("model",))
+    k = {"w": _wshard(_arrange_wkv(p["k"]["w"], cfg), cfg, (None, "model"))}
+    v = {"w": _wshard(_arrange_wkv(p["v"]["w"], cfg), cfg, (None, "model"))}
+    if "b" in p["k"]:
+        k["b"] = _wshard(_arrange_kv_bias(p["k"]["b"], cfg), cfg,
+                         ("model",))
+        v["b"] = _wshard(_arrange_kv_bias(p["v"]["b"], cfg), cfg,
+                         ("model",))
+    return dict(p, q=q, k=k, v=v,
+                o={"w": _wshard(_arrange_wo(p["o"]["w"], cfg), cfg,
+                                ("model", None))})
+
+
+def _arrange_kv_bias(b, cfg):
+    _, eff_kv, r, _ = cfg.head_layout()
+    if eff_kv == cfg.n_kv_heads:
+        return b
+    dh = cfg.head_dim
+    b3 = b.reshape(cfg.n_kv_heads, dh)
+    if r > 1:
+        b3 = jnp.repeat(b3, r, axis=0)
+    else:
+        b3 = jnp.concatenate(
+            [b3, jnp.zeros((eff_kv - cfg.n_kv_heads, dh), b.dtype)], axis=0)
+    return b3.reshape(eff_kv * dh)
+
+
+# ---------------------------------------------------------------------------
+# attention block (self-attention, GQA, RoPE)
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg, *, cross: bool = False):
+    ks = jax.random.split(key, 5)
+    d, dh = cfg.d_model, cfg.head_dim
+    kv_src = cfg.d_image if cross and cfg.d_image else d
+    return {
+        "ln": _norm_init(cfg),
+        "q": dense_init(ks[0], d, cfg.n_heads * dh, cfg.jdtype,
+                        bias=cfg.qkv_bias),
+        "k": dense_init(ks[1], kv_src, cfg.n_kv_heads * dh, cfg.jdtype,
+                        bias=cfg.qkv_bias),
+        "v": dense_init(ks[2], kv_src, cfg.n_kv_heads * dh, cfg.jdtype,
+                        bias=cfg.qkv_bias),
+        "o": dense_init(ks[3], cfg.n_heads * dh, d, cfg.jdtype),
+    }
+
+
+def _qkv(p, cfg, x, kv_x=None):
+    """Projects straight into the TP head layout (p pre-arranged)."""
+    b, s, _ = x.shape
+    kv_x = x if kv_x is None else kv_x
+    sk = kv_x.shape[1]
+    dh = cfg.head_dim
+    q = linear(p["q"], x).reshape(b, s, cfg.eff_heads, dh)
+    k = linear(p["k"], kv_x).reshape(b, sk, cfg.eff_kv_heads, dh)
+    v = linear(p["v"], kv_x).reshape(b, sk, cfg.eff_kv_heads, dh)
+    return q, k, v
+
+
+def _finish_attn(p, cfg, out):
+    """o-proj in the TP layout (pad rows of the arranged o-weight are
+    zero, so padded heads contribute nothing)."""
+    b, s = out.shape[:2]
+    eff = out.shape[2]
+    return linear(p["o"], out.reshape(b, s, eff * cfg.head_dim))
+
+
+def self_attn(p, cfg, x, positions):
+    p = _eff_attn_params(p, cfg)
+    q, k, v = _qkv(p, cfg, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = chunked_attention(q, k, v, q_positions=positions,
+                            kv_positions=positions, causal=True,
+                            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    return _finish_attn(p, cfg, out), (k, v)
+
+
+def _cache_update(cache, update, pos):
+    """In-place-semantics cache write at ``pos`` (seq axis 1).
+
+    bf16 caches go through a uint16 bitcast: XLA:CPU's float-normalization
+    otherwise legalizes the bf16 dynamic-update-slice via full f32 converts
+    of the WHOLE cache per layer (measured: 25 GiB temp / 1 TB traffic on
+    qwen1.5-4b decode_32k — EXPERIMENTS.md §Perf iteration D1). TPU executes
+    bf16 DUS natively; the bitcast makes the lowered HLO match that
+    semantics on every backend."""
+    update = update.astype(cache.dtype)
+    if cache.dtype == jnp.bfloat16:
+        c = jax.lax.bitcast_convert_type(cache, jnp.uint16)
+        u = jax.lax.bitcast_convert_type(update, jnp.uint16)
+        out = jax.lax.dynamic_update_slice_in_dim(c, u, pos, axis=1)
+        return jax.lax.bitcast_convert_type(out, jnp.bfloat16)
+    return jax.lax.dynamic_update_slice_in_dim(cache, update, pos, axis=1)
+
+
+def self_attn_decode(p, cfg, x1, k_cache, v_cache, pos):
+    """x1 (B,1,D); caches (B,S,Hkv_eff,D); pos scalar."""
+    p = _eff_attn_params(p, cfg)
+    q, k, v = _qkv(p, cfg, x1)
+    posv = pos[None] if pos.ndim == 0 else pos
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k = apply_rope(k, posv, cfg.rope_theta)
+    k_cache = _cache_update(k_cache, k, pos)
+    v_cache = _cache_update(v_cache, v, pos)
+    out = decode_attention(q, k_cache, v_cache, pos)
+    return _finish_attn(p, cfg, out), (k_cache, v_cache)
+
+
+def cross_attn(p, cfg, x, img_kv):
+    """Non-causal attention to fixed image keys/values (already projected,
+    padded and replicated): img_kv = (k, v) each (B, S_img, Hkv_eff, D)."""
+    b, s, _ = x.shape
+    q = linear({"w": _arrange_wq(p["q"]["w"], cfg)}, x
+               ).reshape(b, s, cfg.eff_heads, cfg.head_dim)
+    k, v = img_kv
+    out = chunked_attention(
+        q, k, v,
+        q_positions=jnp.zeros((s,), jnp.int32),
+        kv_positions=jnp.zeros((k.shape[1],), jnp.int32),
+        causal=False, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    return _finish_attn({"o": {"w": _arrange_wo(p["o"]["w"], cfg)}}, cfg,
+                        out)
+
+
+def project_image_kv(p_cross, cfg, image_embeds):
+    """Project image embeddings once into each cross layer's K/V."""
+    b, si, _ = image_embeds.shape
+    k = linear({"w": _arrange_wkv(p_cross["k"]["w"], cfg)}, image_embeds
+               ).reshape(b, si, cfg.eff_kv_heads, cfg.head_dim)
+    v = linear({"w": _arrange_wkv(p_cross["v"]["w"], cfg)}, image_embeds
+               ).reshape(b, si, cfg.eff_kv_heads, cfg.head_dim)
+    return (k, v)
+
+
+# ---------------------------------------------------------------------------
+# decoder blocks per family
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg, *, cross: bool = False):
+    ks = jax.random.split(key, 4)
+    p = {"attn": attn_init(ks[0], cfg), "ln2": _norm_init(cfg)}
+    if cfg.family == "moe":
+        p["moe"] = moe_init(ks[1], cfg.d_model, cfg.d_ff, cfg.n_experts,
+                            cfg.jdtype)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.jdtype,
+                            kind=cfg.mlp_kind)
+    if cross:
+        p["xattn"] = attn_init(ks[2], cfg, cross=True)
+        p["ln_x"] = _norm_init(cfg)
+        p["gate_x"] = jnp.zeros((1,), cfg.jdtype)
+    return p
+
+
+def _ffn(p, cfg, x):
+    if cfg.family == "moe":
+        b, s, d = x.shape
+        y = moe_apply(p["moe"], x.reshape(b * s, d),
+                      top_k=cfg.experts_per_token,
+                      capacity_factor=cfg.capacity_factor,
+                      shard_axes=cfg.batch_axes, groups=cfg.dp_shards)
+        return y.reshape(b, s, d)
+    return mlp_apply(p["mlp"], x, cfg.mlp_kind)
+
+
+def block_apply(p, cfg, x, positions, img_kv=None):
+    h, kv = self_attn(p["attn"], cfg, _norm(p["attn"]["ln"], x, cfg),
+                      positions)
+    x = x + h
+    if img_kv is not None and "xattn" in p:
+        hx = cross_attn(p["xattn"], cfg, _norm(p["ln_x"], x, cfg), img_kv)
+        x = x + jnp.tanh(p["gate_x"]) * hx
+    x = x + _ffn(p, cfg, _norm(p["ln2"], x, cfg))
+    return x, kv
+
+
+def block_decode(p, cfg, x1, k_cache, v_cache, pos, img_kv=None):
+    h, (k_cache, v_cache) = self_attn_decode(
+        p["attn"], cfg, _norm(p["attn"]["ln"], x1, cfg), k_cache, v_cache, pos)
+    x1 = x1 + h
+    if img_kv is not None and "xattn" in p:
+        hx = cross_attn(p["xattn"], cfg, _norm(p["ln_x"], x1, cfg), img_kv)
+        x1 = x1 + jnp.tanh(p["gate_x"]) * hx
+    x1 = x1 + _ffn(p, cfg, _norm(p["ln2"], x1, cfg))
+    return x1, (k_cache, v_cache)
+
+
+# --- hybrid (zamba2): mamba blocks + shared attention block ---
+
+def mamba_block_init(key, cfg):
+    return {"ln": _norm_init(cfg),
+            "mamba": ssm.mamba_init(key, cfg.d_model, cfg.ssm_state,
+                                    cfg.jdtype)}
+
+
+def rwkv_block_init(key, cfg):
+    p = rk.rwkv_init(key, cfg.d_model, cfg.head_size, cfg.d_ff, cfg.jdtype)
+    p["ln1"] = _norm_init(cfg)
+    p["ln2"] = _norm_init(cfg)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def _stacked(key, n, init_fn):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def init(key, cfg) -> Params:
+    ks = jax.random.split(key, 8)
+    p: dict = {"embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model,
+                                   cfg.jdtype),
+               "ln_f": _norm_init(cfg)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[1], cfg.d_model, cfg.vocab_size,
+                                  cfg.jdtype)
+    fam = cfg.family
+    if fam in ("dense", "moe", "audio"):
+        p["blocks"] = _stacked(ks[2], cfg.n_layers,
+                               lambda k: block_init(k, cfg))
+    elif fam == "vlm":
+        g, r = divmod(cfg.n_layers, cfg.cross_attn_interval)
+        assert r == 0, "vlm n_layers must divide cross_attn_interval"
+        p["plain"] = _stacked(
+            ks[2], g, lambda k: _stacked(
+                k, cfg.cross_attn_interval - 1, lambda k2: block_init(k2, cfg)))
+        p["crossed"] = _stacked(ks[3], g,
+                                lambda k: block_init(k, cfg, cross=True))
+        p["img_proj"] = dense_init(ks[4], cfg.d_image, cfg.d_image,
+                                   cfg.jdtype)
+    elif fam == "hybrid":
+        n_super, trail = divmod(cfg.n_layers, cfg.attn_interval)
+        p["mamba"] = _stacked(
+            ks[2], n_super, lambda k: _stacked(
+                k, cfg.attn_interval, lambda k2: mamba_block_init(k2, cfg)))
+        p["mamba_trail"] = _stacked(ks[3], trail,
+                                    lambda k: mamba_block_init(k, cfg))
+        p["shared_attn"] = block_init(ks[5], cfg)     # ONE shared block
+    elif fam == "ssm":
+        p["blocks"] = _stacked(ks[2], cfg.n_layers,
+                               lambda k: rwkv_block_init(k, cfg))
+    else:
+        raise ValueError(fam)
+    return p
+
+
+def _logits(p, cfg, x):
+    w = (p["embed"]["w"].T if cfg.tie_embeddings
+         else p["lm_head"]["w"])
+    return _norm(p["ln_f"], x, cfg) @ w
+
+
+def _maybe_ckpt(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _embed_in(p, cfg, ids=None, embeds=None):
+    if embeds is not None:
+        x = embeds.astype(cfg.jdtype)
+    else:
+        x = p["embed"]["w"][ids]
+    return _shard_batch(x, cfg)
+
+
+def _shard_batch(x, cfg):
+    """Pin activation sharding at block boundaries: batch over the DP mesh
+    axes AND d_model over 'model' (Megatron sequence-parallel style). The
+    d_model split matters because these boundary activations are exactly
+    what remat checkpoints: unsharded, 48 layers x (1M, 5120) bf16 cost
+    31 GiB/device on llama4-scout train_4k (§Perf M3); sharded they cost
+    2 GiB plus ~2s of (overlappable) per-layer all-gather.
+
+    ``cfg.batch_axes`` is set by the launch layer only when (a) a mesh is
+    in scope and (b) the global batch divides the DP axis product — the
+    single-device smoke/test path never sees a constraint."""
+    if not cfg.batch_axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+    # NOTE (§Perf M3): for the attention-free family this trades ~35%
+    # slower steps (extra all-gathers, no TP benefit) for 2.6x lower
+    # residency (31 GiB -> 12 GiB on rwkv6 train_4k) — kept ON because
+    # fitting 16 GiB HBM is the binding constraint.
+    dmodel_ax = "model" if (x.ndim >= 2 and x.shape[-1] % max(cfg.tp, 1)
+                            == 0 and cfg.tp > 1) else None
+    spec = P(tuple(cfg.batch_axes),
+             *([None] * (x.ndim - 2) + [dmodel_ax]))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---- forward (train / prefill body) ----
+
+def forward(p, cfg, ids=None, *, embeds=None, image_embeds=None,
+            collect_cache: bool = False):
+    """-> (logits (B,S,V), cache | None)."""
+    x = _embed_in(p, cfg, ids, embeds)
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    fam = cfg.family
+    cache = {}
+
+    if fam in ("dense", "moe", "audio"):
+        def body(h, blk):
+            h = _shard_batch(h, cfg)
+            h, kv = block_apply(blk, cfg, h, positions)
+            return h, kv if collect_cache else None
+        x, kvs = jax.lax.scan(_maybe_ckpt(body, cfg), x, p["blocks"])
+        if collect_cache:
+            cache = {"k": kvs[0], "v": kvs[1]}
+
+    elif fam == "vlm":
+        img = linear(p["img_proj"], image_embeds.astype(cfg.jdtype))
+
+        def plain_body(h, blk):
+            h = _shard_batch(h, cfg)
+            h, kv = block_apply(blk, cfg, h, positions)
+            return h, kv if collect_cache else None
+
+        def super_body(h, blks):
+            plain, crossed = blks
+            h, kv_p = jax.lax.scan(_maybe_ckpt(plain_body, cfg), h, plain)
+            img_kv = project_image_kv(crossed["xattn"], cfg, img)
+            h, kv_c = block_apply(crossed, cfg, h, positions, img_kv=img_kv)
+            return h, ((kv_p, kv_c) if collect_cache else None)
+
+        x, kvs = jax.lax.scan(super_body, x, (p["plain"], p["crossed"]))
+        if collect_cache:
+            (kp, kc) = kvs
+            cache = {"k_plain": kp[0], "v_plain": kp[1],
+                     "k_cross": kc[0], "v_cross": kc[1]}
+
+    elif fam == "hybrid":
+        pad = (-s) % ssm.CHUNK
+        xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0))) if pad else x
+        sp = s + pad
+        pos_p = jnp.arange(sp, dtype=jnp.int32)
+
+        def mamba_body(h, blk):
+            h = _shard_batch(h, cfg)
+            y, st, cv = ssm.mamba_forward(
+                blk["mamba"], _norm(blk["ln"], h, cfg),
+                ssm_state=cfg.ssm_state)
+            return h + y, (st, cv) if collect_cache else None
+
+        def super_body(h, blks):
+            h, sts = jax.lax.scan(_maybe_ckpt(mamba_body, cfg), h, blks)
+            h2, kv = block_apply(p["shared_attn"], cfg, h, pos_p)
+            return h2, ((sts, kv) if collect_cache else None)
+
+        xp, ys = jax.lax.scan(super_body, xp, p["mamba"])
+        xp, trail_states = jax.lax.scan(_maybe_ckpt(mamba_body, cfg), xp,
+                                        p["mamba_trail"])
+        x = xp[:, :s]
+        if collect_cache:
+            sts, kvs = ys
+            cache = {"ssm": sts[0], "conv": sts[1],
+                     "k": kvs[0], "v": kvs[1],
+                     "ssm_trail": trail_states[0],
+                     "conv_trail": trail_states[1]}
+
+    elif fam == "ssm":
+        pad = (-s) % rk.CHUNK
+        xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0))) if pad else x
+
+        def body(h, blk):
+            h = _shard_batch(h, cfg)
+            y, st, lx = rk.rwkv_time_mix(blk["time"],
+                                         _norm(blk["ln1"], h, cfg),
+                                         head_size=cfg.head_size)
+            h = h + y
+            y2, lx2 = rk.rwkv_channel_mix(blk["channel"],
+                                          _norm(blk["ln2"], h, cfg))
+            h = h + y2
+            return h, (st, lx, lx2) if collect_cache else None
+        xp, sts = jax.lax.scan(_maybe_ckpt(body, cfg), xp, p["blocks"])
+        x = xp[:, :s]
+        if collect_cache:
+            cache = {"state": sts[0], "last_t": sts[1], "last_c": sts[2]}
+
+    else:
+        raise ValueError(fam)
+
+    return _logits(p, cfg, x), (cache if collect_cache else None)
+
+
+def loss_fn(p, cfg, ids, labels, *, embeds=None, image_embeds=None):
+    logits, _ = forward(p, cfg, ids, embeds=embeds,
+                        image_embeds=image_embeds)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    # SPMD-friendly gold-logit extraction: a gather over the ('model'-
+    # sharded) vocab axis would force the partitioner to replicate the
+    # logits; the iota-compare form is elementwise + reduce (psum).
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits, 0.0),
+                   axis=-1)
+    loss = (logz - gold).mean()
+    return loss, {"loss": loss, "ppl": jnp.exp(loss)}
+
+
+# ---- caches / decode ----
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=None) -> Params:
+    """Empty decode cache sized for ``max_seq`` context."""
+    dt = dtype or cfg.jdtype
+    fam = cfg.family
+    dh, hkv = cfg.head_dim, cfg.eff_kv_heads
+    if fam in ("dense", "moe", "audio"):
+        shape = (cfg.n_layers, batch, max_seq, hkv, dh)
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    if fam == "vlm":
+        g = cfg.n_layers // cfg.cross_attn_interval
+        sp = (g, cfg.cross_attn_interval - 1, batch, max_seq, hkv, dh)
+        sc = (g, batch, max_seq, hkv, dh)
+        si = (g, batch, cfg.n_image_tokens, hkv, dh)
+        return {"k_plain": jnp.zeros(sp, dt), "v_plain": jnp.zeros(sp, dt),
+                "k_cross": jnp.zeros(sc, dt), "v_cross": jnp.zeros(sc, dt),
+                "img_k": jnp.zeros(si, dt), "img_v": jnp.zeros(si, dt)}
+    if fam == "hybrid":
+        n_super, trail = divmod(cfg.n_layers, cfg.attn_interval)
+        h = 2 * cfg.d_model // 64
+        cchan = 2 * cfg.d_model + 2 * cfg.ssm_state
+        return {
+            "ssm": jnp.zeros((n_super, cfg.attn_interval, batch, h, 64,
+                              cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros((n_super, cfg.attn_interval, batch,
+                               ssm.CONV_K - 1, cchan), dt),
+            "ssm_trail": jnp.zeros((trail, batch, h, 64, cfg.ssm_state),
+                                   jnp.float32),
+            "conv_trail": jnp.zeros((trail, batch, ssm.CONV_K - 1, cchan),
+                                    dt),
+            "k": jnp.zeros((n_super, batch, max_seq, hkv, dh), dt),
+            "v": jnp.zeros((n_super, batch, max_seq, hkv, dh), dt),
+        }
+    if fam == "ssm":
+        h = cfg.d_model // cfg.head_size
+        return {"state": jnp.zeros((cfg.n_layers, batch, h, cfg.head_size,
+                                    cfg.head_size), jnp.float32),
+                "last_t": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model), dt),
+                "last_c": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model), dt)}
+    raise ValueError(fam)
+
+
+def decode_step(p, cfg, cache, ids1=None, pos=None, *, embeds1=None,
+                image_embeds=None):
+    """One serving step: ids1 (B, 1) int32 (or ``embeds1`` (B, 1, D) for the
+    audio frontend stub), ``pos`` scalar int32 position of the new token.
+    -> (logits (B, V), new cache)."""
+    x = _embed_in(p, cfg, ids1, embeds1)
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "audio"):
+        def body(h, xs):
+            blk, kc, vc = xs
+            h, (kc, vc) = block_decode(blk, cfg, h, kc, vc, pos)
+            return h, (kc, vc)
+        x, (k, v) = jax.lax.scan(body, x, (p["blocks"], cache["k"],
+                                           cache["v"]))
+        cache = {"k": k, "v": v}
+
+    elif fam == "vlm":
+        img_proj = None
+        if image_embeds is not None:
+            img_proj = linear(p["img_proj"], image_embeds.astype(cfg.jdtype))
+
+        def plain_body(h, xs):
+            blk, kc, vc = xs
+            h, (kc, vc) = block_decode(blk, cfg, h, kc, vc, pos)
+            return h, (kc, vc)
+
+        def super_body(h, xs):
+            plain, crossed, kp, vp, kc, vc, ik, iv = xs
+            h, (kp, vp) = jax.lax.scan(plain_body, h, (plain, kp, vp))
+            h, (kc, vc) = block_decode(crossed, cfg, h, kc, vc, pos,
+                                       img_kv=(ik, iv))
+            return h, (kp, vp, kc, vc)
+
+        x, (kp, vp, kc, vc) = jax.lax.scan(
+            super_body, x,
+            (p["plain"], p["crossed"], cache["k_plain"], cache["v_plain"],
+             cache["k_cross"], cache["v_cross"], cache["img_k"],
+             cache["img_v"]))
+        cache = dict(cache, k_plain=kp, v_plain=vp, k_cross=kc, v_cross=vc)
+
+    elif fam == "hybrid":
+        def mamba_body(h, xs):
+            blk, st, cv = xs
+            y, st, cv = ssm.mamba_decode_step(
+                blk["mamba"], _norm(blk["ln"], h, cfg), st, cv,
+                ssm_state=cfg.ssm_state)
+            return h + y, (st, cv)
+
+        def super_body(h, xs):
+            blks, st, cv, kc, vc = xs
+            h, (st, cv) = jax.lax.scan(mamba_body, h, (blks, st, cv))
+            h, (kc, vc) = block_decode(p["shared_attn"], cfg, h, kc, vc, pos)
+            return h, (st, cv, kc, vc)
+
+        x, (st, cv, k, v) = jax.lax.scan(
+            super_body, x, (p["mamba"], cache["ssm"], cache["conv"],
+                            cache["k"], cache["v"]))
+        x, (st_t, cv_t) = jax.lax.scan(
+            mamba_body, x, (p["mamba_trail"], cache["ssm_trail"],
+                            cache["conv_trail"]))
+        cache = {"ssm": st, "conv": cv, "k": k, "v": v,
+                 "ssm_trail": st_t, "conv_trail": cv_t}
+
+    elif fam == "ssm":
+        def body(h, xs):
+            blk, st, lt, lc = xs
+            y, st, lt = rk.rwkv_time_mix_step(
+                blk["time"], _norm(blk["ln1"], h, cfg), st, lt,
+                head_size=cfg.head_size)
+            h = h + y
+            y2, lc = rk.rwkv_channel_mix_step(
+                blk["channel"], _norm(blk["ln2"], h, cfg), lc)
+            h = h + y2
+            return h, (st, lt, lc)
+        x, (st, lt, lc) = jax.lax.scan(
+            body, x, (p["blocks"], cache["state"], cache["last_t"],
+                      cache["last_c"]))
+        cache = {"state": st, "last_t": lt, "last_c": lc}
+
+    else:
+        raise ValueError(fam)
+
+    return _logits(p, cfg, x)[:, 0], cache
+
+
+def prefill(p, cfg, ids=None, *, embeds=None, image_embeds=None,
+            max_seq: int | None = None):
+    """Run the prompt, return (last-token logits (B,V), decode cache).
+    For attention families the cache capacity equals the prompt length
+    unless ``max_seq`` extends it."""
+    logits, cache = forward(p, cfg, ids, embeds=embeds,
+                            image_embeds=image_embeds, collect_cache=True)
+    fam = cfg.family
+    b = (ids if ids is not None else embeds).shape[0]
+    s = (ids if ids is not None else embeds).shape[1]
+    cap = max_seq or s
+    if fam in ("dense", "moe", "audio", "hybrid", "vlm"):
+        def grow(x):   # pad cache seq dim (axis -3) to capacity
+            pad = cap - x.shape[-3]
+            if pad <= 0:
+                return x
+            w = [(0, 0)] * x.ndim
+            w[-3] = (0, pad)
+            return jnp.pad(x, w)
+        for key in list(cache):
+            if key.startswith(("k", "v")):
+                cache[key] = grow(cache[key])
+    if fam == "vlm":
+        img = linear(p["img_proj"], image_embeds.astype(cfg.jdtype))
+        iks, ivs = [], []
+        g = cfg.n_layers // cfg.cross_attn_interval
+        for gi in range(g):
+            blk = jax.tree.map(lambda a: a[gi], p["crossed"])
+            ik, iv = project_image_kv(blk["xattn"], cfg, img)
+            iks.append(ik)
+            ivs.append(iv)
+        cache["img_k"] = jnp.stack(iks)
+        cache["img_v"] = jnp.stack(ivs)
+    if fam == "hybrid":
+        # fold per-chunk collected states: mamba_forward already returns
+        # final states; nothing to do.
+        pass
+    return logits[:, -1], cache

@@ -1,0 +1,158 @@
+"""PointNet++ in pure JAX — the workload Pointer accelerates.
+
+Implements the paper's two-stage set-abstraction (SA) pipeline exactly as
+described in Fig. 1:
+
+  point mapping   : farthest point sampling (FPS) + k-NN neighbor search
+  feature proc.   : aggregation  D(F_i, F_j) = F_j - F_i   (per neighbor)
+                    feature computation  M(D(...))          (3-stage MLP)
+                    reduction            column-wise max over neighbors
+
+plus a classification head for the end-to-end training example. The
+geometry functions are the JAX twins of the NumPy ones in
+``repro.core.workload`` (cross-checked in tests); this module is what the
+dry-run/trainer lower, while ``repro.core`` is what the accelerator
+simulator consumes.
+
+The MLP can run through the ReRAM path (``mlp_backend='reram'``), which
+applies the same INT8 / 2-bit-cell bit-sliced arithmetic as the crossbar
+(via ``repro.kernels``) — numerically identical to the quantized network,
+demonstrating the paper's no-accuracy-variation property.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.workload import PointNetConfig, SALayerSpec
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# geometry: the "point mapping" stage
+# ---------------------------------------------------------------------------
+
+def farthest_point_sample(points: jnp.ndarray, n_samples: int,
+                          start: int = 0) -> jnp.ndarray:
+    """FPS over ``points`` (N, 3) -> (n_samples,) int32 indices.
+    Deterministic (start point given); identical to
+    ``core.workload.farthest_point_sample_np``."""
+    n = points.shape[0]
+
+    def body(i, state):
+        idx, dist, cur = state
+        idx = idx.at[i].set(cur)
+        d = jnp.sum((points - points[cur]) ** 2, axis=1)
+        dist = jnp.minimum(dist, d)
+        return idx, dist, jnp.argmax(dist).astype(jnp.int32)
+
+    idx0 = jnp.zeros(n_samples, dtype=jnp.int32)
+    dist0 = jnp.full((n,), jnp.inf, dtype=points.dtype)
+    idx, _, _ = jax.lax.fori_loop(0, n_samples, body,
+                                  (idx0, dist0, jnp.int32(start)))
+    return idx
+
+
+def knn(queries: jnp.ndarray, points: jnp.ndarray, k: int) -> jnp.ndarray:
+    """(Q, k) indices of k nearest ``points`` per query (self included when
+    the query is a member of ``points``)."""
+    d = jnp.sum((queries[:, None, :] - points[None, :, :]) ** 2, axis=-1)
+    _, idx = jax.lax.top_k(-d, k)
+    return idx
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def _init_mlp(key, widths: tuple[int, ...], dtype=jnp.float32):
+    params = []
+    for i, (n, m) in enumerate(zip(widths[:-1], widths[1:])):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (n, m), dtype) * jnp.sqrt(2.0 / n)
+        params.append({"w": w, "b": jnp.zeros((m,), dtype)})
+    return params
+
+
+def init_params(key, config: PointNetConfig, n_classes: int = 40,
+                dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, config.n_layers + 1)
+    sa = [_init_mlp(k, spec.mlp, dtype)
+          for k, spec in zip(keys[:-1], config.layers)]
+    d_last = config.layers[-1].out_features
+    head = _init_mlp(keys[-1], (d_last, 256, n_classes), dtype)
+    return {"sa": sa, "head": head}
+
+
+# ---------------------------------------------------------------------------
+# feature processing
+# ---------------------------------------------------------------------------
+
+def _apply_mlp(mlp_params, x, *, final_relu=True, matmul=None):
+    mm = matmul if matmul is not None else lambda a, w: a @ w
+    for i, lyr in enumerate(mlp_params):
+        x = mm(x, lyr["w"]) + lyr["b"]
+        if final_relu or i < len(mlp_params) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def lift_features(points: jnp.ndarray, n_features: int) -> jnp.ndarray:
+    """Deterministic layer-0 features of width ``n_features`` from raw
+    coordinates (xyz, bias, and sin/cos liftings — stands in for the
+    normals/colors real datasets provide)."""
+    n = points.shape[0]
+    feats = [points, jnp.ones((n, 1), points.dtype),
+             jnp.sin(3.0 * points), jnp.cos(3.0 * points),
+             jnp.sin(7.0 * points), jnp.cos(7.0 * points)]
+    f = jnp.concatenate(feats, axis=-1)
+    return f[:, :n_features]
+
+
+def sa_layer(mlp_params, spec: SALayerSpec, points, features, *,
+             matmul=None):
+    """One set-abstraction layer on a single cloud.
+    points (N, 3), features (N, C_in) -> (M, 3), (M, C_out)."""
+    centers = farthest_point_sample(points, spec.n_centers)
+    c_pts = points[centers]
+    nbr = knn(c_pts, points, spec.n_neighbors)          # (M, K)
+    f_nbr = features[nbr]                               # (M, K, C)
+    f_ctr = features[centers][:, None, :]
+    diff = f_nbr - f_ctr                                # aggregation D(.)
+    h = _apply_mlp(mlp_params, diff, matmul=matmul)     # feature comp. M(.)
+    out = jnp.max(h, axis=1)                            # reduction
+    return c_pts, out
+
+
+def forward(params: Params, config: PointNetConfig, cloud: jnp.ndarray, *,
+            matmul=None) -> jnp.ndarray:
+    """Single-cloud forward: (N, 3) -> logits (n_classes,)."""
+    feats = lift_features(cloud, config.layers[0].in_features)
+    pts = cloud
+    for mlp_params, spec in zip(params["sa"], config.layers):
+        pts, feats = sa_layer(mlp_params, spec, pts, feats, matmul=matmul)
+    g = jnp.max(feats, axis=0)                          # global max pool
+    return _apply_mlp(params["head"], g, final_relu=False, matmul=matmul)
+
+
+def batched_forward(params, config, clouds, *, matmul=None):
+    return jax.vmap(lambda c: forward(params, config, c, matmul=matmul)
+                    )(clouds)
+
+
+def loss_fn(params, config, clouds, labels, *, matmul=None):
+    logits = batched_forward(params, config, clouds, matmul=matmul)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+    acc = (jnp.argmax(logits, axis=1) == labels).mean()
+    return nll, acc
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
+def eval_step(params, config: PointNetConfig, clouds, labels):
+    return loss_fn(params, config, clouds, labels)

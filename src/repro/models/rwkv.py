@@ -1,0 +1,163 @@
+"""RWKV6 ("Finch") style attention-free mixing with data-dependent decay.
+
+Per head (K = V = head_size), state S in R^{K x V}:
+
+    o_t = r_t @ (S_{t-1} + (u ⊙ k_t) (x) v_t)
+    S_t = diag(w_t) S_{t-1} + k_t (x) v_t            w_t in (0,1)^K, per token
+
+where w_t is *data-dependent* (the RWKV6 novelty vs RWKV4/5). Training and
+prefill use a chunk-parallel form (chunk = CHUNK tokens) with a ``lax.scan``
+carrying the (B, H, K, V) state across chunks; decode is the O(1) recurrence.
+
+Numerics: the decay is parameterized ``log w = -(W_MIN + W_SPAN·sigmoid(·))``
+so the largest intra-chunk exponent is CHUNK * (W_MIN + W_SPAN) < 88 — all
+fp32 ``exp`` are finite (chunked == sequential property-tested).
+
+Token shift (RWKV's 1-token mix) is implemented with a shift, and its
+trailing token is carried in the decode cache. Projections are direct
+linears (the low-rank "LoRA" decomposition of the official weights is an
+inference-compression detail, not a structural one — DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, linear
+
+__all__ = ["rwkv_init", "rwkv_time_mix", "rwkv_time_mix_step",
+           "rwkv_channel_mix", "rwkv_channel_mix_step", "CHUNK"]
+
+CHUNK = 16
+W_MIN, W_SPAN = 0.01, 4.0
+
+
+def rwkv_init(key, d_model: int, head_size: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 10)
+    h = d_model // head_size
+    return {
+        "time": {
+            "mix": (0.5 * jnp.ones((5, d_model), jnp.float32)).astype(dtype),
+            "r": dense_init(ks[0], d_model, d_model, dtype),
+            "k": dense_init(ks[1], d_model, d_model, dtype),
+            "v": dense_init(ks[2], d_model, d_model, dtype),
+            "g": dense_init(ks[3], d_model, d_model, dtype),
+            "w": dense_init(ks[4], d_model, d_model, dtype),
+            "u": jnp.zeros((h, head_size), jnp.float32),
+            "ln_g": jnp.ones((d_model,), dtype),
+            "out": dense_init(ks[5], d_model, d_model, dtype),
+        },
+        "channel": {
+            "mix": (0.5 * jnp.ones((2, d_model), jnp.float32)).astype(dtype),
+            "k": dense_init(ks[6], d_model, d_ff, dtype),
+            "v": dense_init(ks[7], d_ff, d_model, dtype),
+        },
+    }
+
+
+def _shift(x, last=None):
+    """x (B,S,D) -> previous-token tensor; ``last`` (B,1,D) for decode."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _mix(x, xx, mu):
+    return x + (xx - x) * mu.astype(x.dtype)
+
+
+def _log_w(wr):
+    return -(W_MIN + W_SPAN * jax.nn.sigmoid(wr.astype(jnp.float32)))
+
+
+def _group_norm(o, gamma, head_size, eps=1e-5):
+    b, s, d = o.shape
+    oh = o.reshape(b, s, d // head_size, head_size).astype(jnp.float32)
+    mu = oh.mean(-1, keepdims=True)
+    var = oh.var(-1, keepdims=True)
+    oh = (oh - mu) * jax.lax.rsqrt(var + eps)
+    return (oh.reshape(b, s, d) * gamma.astype(jnp.float32))
+
+
+def _projections(pt, x, xx, head_size):
+    b, s, d = x.shape
+    h = d // head_size
+    r = linear(pt["r"], _mix(x, xx, pt["mix"][0]))
+    k = linear(pt["k"], _mix(x, xx, pt["mix"][1]))
+    v = linear(pt["v"], _mix(x, xx, pt["mix"][2]))
+    g = linear(pt["g"], _mix(x, xx, pt["mix"][3]))
+    wr = linear(pt["w"], _mix(x, xx, pt["mix"][4]))
+    shape = (b, s, h, head_size)
+    to = lambda t: t.reshape(shape).astype(jnp.float32)
+    return to(r), to(k), to(v), g, _log_w(wr.reshape(shape))
+
+
+def rwkv_time_mix(pt, x, *, head_size: int, state=None, last_x=None):
+    """x (B,S,D), S % CHUNK == 0. Returns (out, state (B,H,K,V), last_x)."""
+    b, s, d = x.shape
+    h = d // head_size
+    xx = _shift(x, last_x)
+    r, k, v, g, lw = _projections(pt, x, xx, head_size)
+    q = min(CHUNK, s)
+    nc = s // q
+    resh = lambda t: t.reshape(b, nc, q, h, head_size).transpose(1, 0, 2, 3, 4)
+    rc, kc, vc, lwc = map(resh, (r, k, v, lw))
+    u = pt["u"]
+
+    if state is None:
+        state = jnp.zeros((b, h, head_size, head_size), jnp.float32)
+
+    def chunk_body(s0, inp):
+        rb, kb, vb, lwb = inp                        # (B,q,H,K)
+        lcum = jnp.cumsum(lwb, axis=1)               # inclusive
+        p_prev = jnp.exp(lcum - lwb)                 # P_{t-1} = P_t / w_t
+        # inter-chunk: r_t ⊙ P_{t-1} @ S0
+        o_inter = jnp.einsum("bqhk,bhkv->bqhv", rb * p_prev, s0)
+        # intra-chunk: A[t,j] = (r_t ⊙ P_{t-1}/P_j)·k_j , j <= t-1
+        rt = rb * p_prev                             # exponent <= 0 side
+        kt = kb * jnp.exp(-lcum)                     # bounded by chunk decay
+        a = jnp.einsum("bqhk,bjhk->bhqj", rt, kt)
+        mask = (jnp.arange(q)[:, None] > jnp.arange(q)[None, :])
+        a = a * mask[None, None]
+        diag = jnp.einsum("bqhk,bqhk->bqh", rb, u[None, None] * kb)
+        o_intra = jnp.einsum("bhqj,bjhv->bqhv", a, vb) \
+            + diag[..., None] * vb
+        # state handoff
+        decay_rest = jnp.exp(lcum[:, -1:] - lcum)    # Π_{m>j} w_m
+        s_new = s0 * jnp.exp(lcum[:, -1])[..., None] \
+            + jnp.einsum("bqhk,bqhv->bhkv", kb * decay_rest, vb)
+        return s_new, o_inter + o_intra
+
+    state, os_ = jax.lax.scan(chunk_body, state, (rc, kc, vc, lwc))
+    o = os_.transpose(1, 0, 2, 3, 4).reshape(b, s, d)
+    o = _group_norm(o, pt["ln_g"], head_size).astype(x.dtype)
+    o = o * jax.nn.silu(g)
+    return linear(pt["out"], o), state, x[:, -1:]
+
+
+def rwkv_time_mix_step(pt, x1, state, last_x, *, head_size: int):
+    """Single-token decode. x1 (B,1,D)."""
+    b, _, d = x1.shape
+    xx = _shift(x1, last_x)
+    r, k, v, g, lw = _projections(pt, x1, xx, head_size)
+    r1, k1, v1, lw1 = r[:, 0], k[:, 0], v[:, 0], lw[:, 0]   # (B,H,K)
+    u = pt["u"][None]
+    o = jnp.einsum("bhk,bhkv->bhv", r1,
+                   state + (u * k1)[..., None] * v1[:, :, None, :])
+    state = state * jnp.exp(lw1)[..., None] \
+        + k1[..., None] * v1[:, :, None, :]
+    o = o.reshape(b, 1, d)
+    o = _group_norm(o, pt["ln_g"], head_size).astype(x1.dtype)
+    o = o * jax.nn.silu(g)
+    return linear(pt["out"], o), state, x1
+
+
+def rwkv_channel_mix(pc, x, *, last_x=None):
+    xx = _shift(x, last_x)
+    k = linear(pc["k"], _mix(x, xx, pc["mix"][0]))
+    kv = linear(pc["v"], jnp.square(jax.nn.relu(k)))
+    return kv, x[:, -1:]
+
+
+def rwkv_channel_mix_step(pc, x1, last_x):
+    return rwkv_channel_mix(pc, x1, last_x=last_x)

@@ -1,0 +1,156 @@
+"""Mamba2-style selective SSM (SSD), chunked, for zamba2-7b.
+
+State-space recurrence per head h (P = head dim, N = state dim):
+
+    S_t = exp(dt_t * A_h) * S_{t-1} + dt_t * x_t (x) B_t        S: (P, N)
+    y_t = S_t @ C_t + D_h * x_t
+
+computed with the Mamba2 chunk-parallel algorithm: within a chunk of Q
+tokens everything is einsums (MXU-friendly); a ``lax.scan`` carries the
+(B, H, P, N) state across chunks — the inter-chunk handoff stays on-chip,
+which is the paper's inter-layer coordination idea applied to sequence
+chunks (DESIGN.md §5).
+
+Numerics: decays are bounded (``dt <= DT_MAX``, ``|A| <= A_MAX``) so the
+largest intra-chunk log-decay magnitude is Q * DT_MAX * A_MAX < 88 and all
+fp32 ``exp`` calls are finite — chunked == sequential to fp32 tolerance
+(property-tested).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, linear, rms_norm
+
+__all__ = ["mamba_init", "mamba_forward", "mamba_decode_step", "CHUNK"]
+
+CHUNK = 32
+DT_MAX = 0.5
+A_MAX = 4.0
+CONV_K = 4
+
+
+def mamba_init(key, d_model: int, ssm_state: int, dtype, *,
+               expand: int = 2, head_dim: int = 64):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        # order: [z, x, B, C, dt]
+        "in_proj": dense_init(ks[0], d_model,
+                              2 * d_inner + 2 * ssm_state + n_heads, dtype),
+        "conv_w": (jax.random.normal(ks[1], (CONV_K, d_inner + 2 * ssm_state),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(ks[2], d_inner, d_model, dtype),
+    }
+
+
+def _split(p, x, d_model: int, ssm_state: int, expand: int, head_dim: int):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    zxbcdt = linear(p["in_proj"], x)
+    z, xin, b, c, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + ssm_state,
+                 2 * d_inner + 2 * ssm_state], axis=-1)
+    return z, xin, b, c, dt, d_inner, n_heads
+
+
+def _conv(p, u, state=None):
+    """Causal depthwise conv, window CONV_K. u (B,S,C).
+    ``state`` (B, CONV_K-1, C) holds the trailing context for decode."""
+    if state is None:
+        pad = jnp.zeros(u.shape[:1] + (CONV_K - 1,) + u.shape[2:], u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)
+    y = sum(up[:, i:i + u.shape[1]] * p["conv_w"][i]
+            for i in range(CONV_K))
+    new_state = up[:, -(CONV_K - 1):]
+    return jax.nn.silu(y), new_state
+
+
+def _decays(p, dt_raw):
+    """-> (dt, log_a) both (..., H) fp32, bounded."""
+    dt = DT_MAX * jax.nn.sigmoid(dt_raw.astype(jnp.float32)
+                                 + p["dt_bias"]) + 1e-4
+    a = -A_MAX * jax.nn.sigmoid(p["A_log"]) - 1e-4
+    return dt, dt * a
+
+
+def mamba_forward(p, x, *, ssm_state: int, expand: int = 2,
+                  head_dim: int = 64, state=None, conv_state=None):
+    """x (B, S, D) with S % CHUNK == 0 (pad upstream). Returns
+    (y (B,S,D), final_state (B,H,P,N), conv_state)."""
+    bsz, s, d_model = x.shape
+    z, xin, b, c, dt_raw, d_inner, h = _split(p, x, d_model, ssm_state,
+                                              expand, head_dim)
+    u, conv_state = _conv(p, jnp.concatenate([xin, b, c], -1), conv_state)
+    xin, b, c = jnp.split(u, [d_inner, d_inner + ssm_state], axis=-1)
+
+    q = min(CHUNK, s)
+    nc = s // q
+    pdim = head_dim
+    xh = xin.reshape(bsz, nc, q, h, pdim).astype(jnp.float32)
+    bh = b.reshape(bsz, nc, q, ssm_state).astype(jnp.float32)
+    ch = c.reshape(bsz, nc, q, ssm_state).astype(jnp.float32)
+    dt, log_a = _decays(p, dt_raw)                     # (B,S,H)
+    dt = dt.reshape(bsz, nc, q, h)
+    log_a = log_a.reshape(bsz, nc, q, h)
+
+    if state is None:
+        state = jnp.zeros((bsz, h, pdim, ssm_state), jnp.float32)
+
+    def chunk_body(s0, inp):
+        xc, bc, cc, dtc, lac = inp                     # per-chunk, B leading
+        lcum = jnp.cumsum(lac, axis=1)                 # (B,q,H) inclusive
+        # inter: y_t^inter = exp(Lcum_t) * C_t @ S0
+        y_inter = jnp.einsum("bqn,bhpn->bqhp", cc, s0) \
+            * jnp.exp(lcum)[..., None]
+        # intra: M[t,j] = exp(Lcum_t - Lcum_j) (C_t.B_j) dt_j  for j<=t
+        ldiff = lcum[:, :, None, :] - lcum[:, None, :, :]   # (B,q,q,H)
+        mask = (jnp.arange(q)[:, None] >= jnp.arange(q)[None, :])
+        m = jnp.exp(ldiff) * jnp.where(mask[None, :, :, None], 1.0, 0.0)
+        cb = jnp.einsum("bqn,bjn->bqj", cc, bc)
+        mm = m * (cb[..., None] * dtc[:, None, :, :])        # (B,q,j,H)
+        y_intra = jnp.einsum("bqjh,bjhp->bqhp", mm, xc)
+        # state handoff
+        l_end = lcum[:, -1][:, None]                         # (B,1,H)
+        w = jnp.exp(l_end - lcum) * dtc                      # (B,q,H)
+        s_new = (s0 * jnp.exp(lcum[:, -1])[..., None, None]
+                 + jnp.einsum("bqh,bqhp,bqn->bhpn", w, xc, bc))
+        return s_new, y_inter + y_intra
+
+    inputs = (xh.transpose(1, 0, 2, 3, 4), bh.transpose(1, 0, 2, 3),
+              ch.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2, 3),
+              log_a.transpose(1, 0, 2, 3))
+    state, ys = jax.lax.scan(chunk_body, state, inputs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, s, h, pdim)
+    y = y + p["D"][None, None, :, None] * xh.reshape(bsz, s, h, pdim)
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return linear(p["out_proj"], y), state, conv_state
+
+
+def mamba_decode_step(p, x1, state, conv_state, *, ssm_state: int,
+                      expand: int = 2, head_dim: int = 64):
+    """Single-token recurrent step. x1 (B, 1, D)."""
+    bsz, _, d_model = x1.shape
+    z, xin, b, c, dt_raw, d_inner, h = _split(p, x1, d_model, ssm_state,
+                                              expand, head_dim)
+    u, conv_state = _conv(p, jnp.concatenate([xin, b, c], -1), conv_state)
+    xin, b, c = jnp.split(u, [d_inner, d_inner + ssm_state], axis=-1)
+    xh = xin[:, 0].reshape(bsz, h, head_dim).astype(jnp.float32)
+    bv = b[:, 0].astype(jnp.float32)                   # (B,N)
+    cv = c[:, 0].astype(jnp.float32)
+    dt, log_a = _decays(p, dt_raw[:, 0])               # (B,H)
+    state = state * jnp.exp(log_a)[..., None, None] \
+        + jnp.einsum("bh,bhp,bn->bhpn", dt, xh, bv)
+    y = jnp.einsum("bhpn,bn->bhp", state, cv) + p["D"][None, :, None] * xh
+    y = y.reshape(bsz, 1, d_inner).astype(x1.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return linear(p["out_proj"], y), state, conv_state

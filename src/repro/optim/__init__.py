@@ -1,0 +1,9 @@
+from .optimizer import (AdamWConfig, adamw_init, adamw_update,
+                        clip_by_global_norm, warmup_cosine)
+from .compression import (CompressionState, compress_error_feedback,
+                          int8_quantize, int8_dequantize)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update",
+           "clip_by_global_norm", "warmup_cosine",
+           "CompressionState", "compress_error_feedback",
+           "int8_quantize", "int8_dequantize"]

@@ -1,0 +1,63 @@
+"""INT8 error-feedback gradient compression for cross-pod all-reduce.
+
+At multi-pod scale the cross-pod (DCN) all-reduce is the slowest collective;
+quantizing gradients to int8 cuts its bytes 4x vs fp32 / 2x vs bf16.
+Error feedback (Karimireddy et al., 2019) accumulates the quantization
+residual into the next step's gradient, preserving convergence (the
+compression error telescopes instead of compounding).
+
+Two layers:
+  * ``compress_error_feedback`` — pure pytree transform usable anywhere
+    (unit-testable; the trainer applies it right before the optimizer,
+    which is mathematically where the cross-pod reduction sits);
+  * ``compressed_psum`` (repro.launch.collectives) — the shard_map wrapper
+    that actually quantizes around ``jax.lax.psum`` on the 'pod' axis.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CompressionState", "int8_quantize", "int8_dequantize",
+           "compress_error_feedback"]
+
+
+@dataclass
+class CompressionState:
+    error: Any       # pytree like grads, fp32 residuals
+
+    @classmethod
+    def init(cls, params):
+        return cls(error=jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def int8_quantize(x: jnp.ndarray):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_error_feedback(grads, state: CompressionState):
+    """Quantize (grad + carried error) to int8, return the dequantized
+    gradient that the (cross-pod) reduction would transport, and the new
+    residual state."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = int8_quantize(g32)
+        deq = int8_dequantize(q, s)
+        return deq.astype(g.dtype), g32 - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(state.error)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = tdef.unflatten([o[0] for o in out])
+    new_e = tdef.unflatten([o[1] for o in out])
+    return new_g, CompressionState(error=new_e)

@@ -1,0 +1,142 @@
+"""Checkpointing (atomic, keep-K, elastic) + fault tolerance primitives."""
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (cleanup_old, latest_step, restore_checkpoint,
+                              save_checkpoint)
+from repro.launch.fault import GracefulShutdown, StragglerWatchdog, retry
+
+
+def tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"params": {"w": jnp.asarray(rng.normal(size=(8, 4)),
+                                        jnp.float32),
+                       "blocks": [jnp.arange(6).reshape(2, 3),
+                                  jnp.ones((3,), jnp.bfloat16)]},
+            "opt": {"step": jnp.int32(7)}}
+
+
+def test_roundtrip(tmp_path):
+    t = tree()
+    save_checkpoint(str(tmp_path), 5, t, meta={"arch": "x"})
+    restored, step, meta = restore_checkpoint(str(tmp_path), t)
+    assert step == 5 and meta == {"arch": "x"}
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_keep_k_and_latest(tmp_path):
+    t = tree()
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(str(tmp_path), s, t, keep=2)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == ["step_4", "step_5"]
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_atomicity_no_tmp_left(tmp_path):
+    save_checkpoint(str(tmp_path), 1, tree())
+    assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, tree())
+    bad = tree()
+    bad["params"]["w"] = jnp.zeros((9, 4))
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), bad)
+
+
+def test_elastic_restore_with_sharding(tmp_path):
+    """Restore under an explicit (single-device) sharding — the elastic
+    path; multi-device resharding uses the same device_put call."""
+    t = tree()
+    save_checkpoint(str(tmp_path), 3, t)
+    dev = jax.devices()[0]
+    shardings = jax.tree.map(
+        lambda _: jax.sharding.SingleDeviceSharding(dev), t)
+    restored, step, _ = restore_checkpoint(str(tmp_path), t,
+                                           shardings=shardings)
+    assert step == 3
+    leaf = jax.tree.leaves(restored)[0]
+    assert leaf.sharding == jax.sharding.SingleDeviceSharding(dev)
+
+
+def test_straggler_watchdog_flags_slow_steps():
+    w = StragglerWatchdog(threshold=2.0, alpha=0.5)
+    for s in range(10):
+        assert not w.observe(s, 0.10)
+    assert w.observe(10, 0.50)           # 5x baseline -> straggler
+    assert w.flagged_steps and w.flagged_steps[0][0] == 10
+    # slow step must not poison the EWMA
+    assert w.ewma == pytest.approx(0.10, rel=0.05)
+
+
+def test_graceful_shutdown_flag():
+    g = GracefulShutdown(signals=(signal.SIGUSR1,))
+    assert not g.requested
+    os.kill(os.getpid(), signal.SIGUSR1)
+    time.sleep(0.05)
+    assert g.requested
+    g.restore()
+
+
+def test_retry_recovers():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("transient")
+        return 42
+    assert retry(flaky, attempts=5, backoff_s=0.001) == 42
+    with pytest.raises(OSError):
+        retry(lambda: (_ for _ in ()).throw(OSError("x")).__next__(),
+              attempts=2, backoff_s=0.001)
+
+
+def test_preemption_checkpoints_and_resumes(tmp_path):
+    """End-to-end preemption: SIGTERM mid-training -> clean checkpoint;
+    restart resumes from it (run in a subprocess)."""
+    script = f"""
+import os, signal, sys
+sys.path.insert(0, "src")
+import jax
+from repro.configs import get_config
+from repro.launch.train import TrainLoopConfig, run_training
+
+cfg = get_config("qwen1.5-0.5b").reduced()
+loop = TrainLoopConfig(steps=2000, batch_size=2, seq_len=16, ckpt_every=3,
+                       ckpt_dir={str(tmp_path)!r}, log_every=1000)
+
+class Bomb:
+    def __init__(self): self.n = 0
+    def __call__(self, step):
+        self.n += 1
+        if self.n == 5: os.kill(os.getpid(), signal.SIGTERM)
+        from repro.data.tokens import TokenStream
+        import jax.numpy as jnp
+        ids, labels = TokenStream(cfg.vocab_size, 16, 2, seed=0).batch(step)
+        return {{"ids": jnp.asarray(ids), "labels": jnp.asarray(labels)}}
+
+hist, state, _ = run_training(cfg, loop, data=Bomb(), verbose=False)
+assert len(hist) < 2000, "should have stopped early"
+print("STOPPED_AT", len(hist))
+"""
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    r = subprocess.run([sys.executable, "-c", script], cwd=os.getcwd(),
+                       capture_output=True, text=True, env=env, timeout=300)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "STOPPED_AT" in r.stdout
+    step = latest_step(str(tmp_path))
+    assert step is not None and step >= 3

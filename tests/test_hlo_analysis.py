@@ -1,0 +1,106 @@
+"""HLO analyzer: trip-count multipliers, dot FLOPs, slice-aware fusion
+bytes, collective accounting — on synthetic HLO text (deterministic) and,
+when present, on real dry-run dumps."""
+import glob
+import os
+
+import pytest
+
+from repro.launch import hlo_analysis as ha
+
+SYNTH = """
+HloModule jit_step
+
+%fused_dus (param_0.1: s32[], param_1.1: bf16[8,1024,128], param_2.1: bf16[8,1,128]) -> bf16[8,1024,128] {
+  %param_1.1 = bf16[8,1024,128]{2,1,0} parameter(1)
+  %convert.1 = f32[8,1024,128]{2,1,0} convert(%param_1.1)
+  %param_2.1 = bf16[8,1,128]{2,1,0} parameter(2)
+  %convert.2 = f32[8,1,128]{2,1,0} convert(%param_2.1)
+  %param_0.1 = s32[] parameter(0)
+  %constant.1 = s32[] constant(0)
+  %dynamic-update-slice.1 = f32[8,1024,128]{2,1,0} dynamic-update-slice(%convert.1, %convert.2, %constant.1, %param_0.1, %constant.1)
+  ROOT %convert.3 = bf16[8,1024,128]{2,1,0} convert(%dynamic-update-slice.1)
+}
+
+%body (arg.1: (s32[], bf16[16,64], bf16[64,32])) -> (s32[], bf16[16,64], bf16[64,32]) {
+  %arg.1 = (s32[], bf16[16,64], bf16[64,32]) parameter(0)
+  %gte.0 = s32[] get-tuple-element(%arg.1), index=0
+  %gte.1 = bf16[16,64]{1,0} get-tuple-element(%arg.1), index=1
+  %gte.2 = bf16[64,32]{1,0} get-tuple-element(%arg.1), index=2
+  %dot.1 = bf16[16,32]{1,0} dot(%gte.1, %gte.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %all-reduce.1 = bf16[16,32]{1,0} all-reduce(%dot.1), replica_groups={}, to_apply=%add_comp
+  ROOT %tuple.1 = (s32[], bf16[16,64], bf16[64,32]) tuple(%gte.0, %gte.1, %gte.2)
+}
+
+%cond (arg.2: (s32[], bf16[16,64], bf16[64,32])) -> pred[] {
+  %arg.2 = (s32[], bf16[16,64], bf16[64,32]) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+%add_comp (x: bf16[], y: bf16[]) -> bf16[] {
+  %x = bf16[] parameter(0)
+  %y = bf16[] parameter(1)
+  ROOT %add.9 = bf16[] add(%x, %y)
+}
+
+ENTRY %main (p0: bf16[16,64], p1: bf16[64,32]) -> bf16[16,32] {
+  %p0 = bf16[16,64]{1,0} parameter(0)
+  %p1 = bf16[64,32]{1,0} parameter(1)
+  %c0 = s32[] constant(0)
+  %tuple.0 = (s32[], bf16[16,64], bf16[64,32]) tuple(%c0, %p0, %p1)
+  %while.1 = (s32[], bf16[16,64], bf16[64,32]) while(%tuple.0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"24"}}
+  %gte.9 = bf16[16,64]{1,0} get-tuple-element(%while.1), index=1
+  ROOT %dot.2 = bf16[16,32]{1,0} dot(%gte.9, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_trip_count_multiplies_loop_flops_and_collectives():
+    r = ha.analyze_hlo(SYNTH)
+    one_dot = 2 * 16 * 32 * 64
+    # dot in while body x24 + entry dot x1
+    assert r["flops"] == pytest.approx(one_dot * 25)
+    assert 24 in r["trip_counts"]
+    # the body all-reduce counted 24x
+    assert r["counts"]["all-reduce"] == 24
+    assert r["bytes_by_op"]["all-reduce"] == 24 * 16 * 32 * 2
+
+
+def test_fusion_dus_costing_is_update_sized():
+    comps = ha._parse_computations(SYNTH)
+    body = comps["fused_dus"]
+    rd, wr = ha._fusion_io_bytes(body, ha._symbols(body))
+    # destination traced through convert -> aliased (not read);
+    # update = (8,1,128) bf16 (+ the s32 index scalar); write = update,
+    # not the full buffer
+    assert rd == 8 * 1 * 128 * 2 + 4
+    assert wr == 8 * 1 * 128 * 2
+
+
+def test_roofline_terms_and_bottleneck():
+    r = ha.roofline(flops_per_device=197e12, bytes_per_device=819e9 / 2,
+                    collective_bytes_per_device=0.0, chips=4,
+                    model_flops_global=4 * 197e12)
+    assert r["bottleneck"] == "compute"
+    assert r["compute_s"] == pytest.approx(1.0)
+    assert r["memory_s"] == pytest.approx(0.5)
+    assert r["roofline_fraction"] == pytest.approx(1.0)
+    assert r["useful_ratio"] == pytest.approx(1.0)
+
+
+def test_model_flops_scales_with_arch():
+    from repro.configs import get_config
+    from repro.configs.base import SHAPES
+    small = ha.model_flops(get_config("qwen1.5-0.5b"), SHAPES["train_4k"])
+    big = ha.model_flops(get_config("deepseek-7b"), SHAPES["train_4k"])
+    assert big > 8 * small
+    dec = ha.model_flops(get_config("deepseek-7b"), SHAPES["decode_32k"])
+    assert dec < small  # one token/seq vs a full batch of sequences
+
+
+@pytest.mark.skipif(not glob.glob("experiments/dryrun/*.hlo.txt"),
+                    reason="no dry-run HLO dumps present")
+def test_real_dump_parses():
+    f = sorted(glob.glob("experiments/dryrun/*.hlo.txt"))[0]
+    r = ha.analyze_hlo(open(f).read())
+    assert r["flops"] > 0 and r["bytes"] > 0

@@ -1,0 +1,98 @@
+"""Optimizer, schedules, gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (AdamWConfig, CompressionState, adamw_init,
+                         adamw_update, clip_by_global_norm,
+                         compress_error_feedback, int8_dequantize,
+                         int8_quantize, warmup_cosine)
+
+
+def test_adamw_converges_on_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=5,
+                      total_steps=200, clip_norm=10.0)
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(8,)),
+                         jnp.float32)
+    params = {"w": jnp.zeros((8,), jnp.float32)}
+    state = adamw_init(params, cfg)
+    for _ in range(200):
+        g = {"w": 2 * (params["w"] - target)}
+        params, state, _ = adamw_update(params, g, state, cfg)
+    assert float(jnp.max(jnp.abs(params["w"] - target))) < 1e-2
+
+
+def test_adamw_bf16_moments_track_fp32():
+    cfg32 = AdamWConfig(lr=0.05, weight_decay=0.0, total_steps=100)
+    cfg16 = AdamWConfig(lr=0.05, weight_decay=0.0, total_steps=100,
+                        moment_dtype="bfloat16")
+    target = jnp.ones((16,)) * 3
+    p32 = {"w": jnp.zeros((16,))}
+    p16 = {"w": jnp.zeros((16,))}
+    s32, s16 = adamw_init(p32, cfg32), adamw_init(p16, cfg16)
+    assert s16["m"]["w"].dtype == jnp.bfloat16
+    for _ in range(100):
+        g32 = {"w": 2 * (p32["w"] - target)}
+        g16 = {"w": 2 * (p16["w"] - target)}
+        p32, s32, _ = adamw_update(p32, g32, s32, cfg32)
+        p16, s16, _ = adamw_update(p16, g16, s16, cfg16)
+    assert float(jnp.max(jnp.abs(p16["w"] - p32["w"]))) < 0.05
+
+
+def test_warmup_cosine_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    lrs = [float(warmup_cosine(cfg, jnp.int32(s))) for s in range(0, 101, 5)]
+    assert lrs[0] == 0.0
+    assert max(lrs) == pytest.approx(1.0, abs=0.01)
+    assert lrs[-1] == pytest.approx(0.1, abs=0.01)
+    assert lrs[1] > lrs[0]
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((4,)) * 3, "b": jnp.ones((4,)) * 4}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(10.0)
+    total = jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(clipped)))
+    assert float(total) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_int8_roundtrip_error_bound():
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(64,)) * 5)
+    q, s = int8_quantize(x)
+    err = jnp.max(jnp.abs(int8_dequantize(q, s) - x))
+    assert float(err) <= float(s) / 2 + 1e-6
+
+
+def test_error_feedback_telescopes():
+    """Accumulated compressed gradients converge to accumulated true
+    gradients (the EF property) — the residual stays bounded."""
+    rng = np.random.default_rng(2)
+    grads = [{"w": jnp.asarray(rng.normal(size=(32,)), jnp.float32)}
+             for _ in range(50)]
+    state = CompressionState.init(grads[0])
+    acc_true = jnp.zeros((32,))
+    acc_comp = jnp.zeros((32,))
+    for g in grads:
+        cg, state = compress_error_feedback(g, state)
+        acc_true += g["w"]
+        acc_comp += cg["w"]
+    # difference equals the remaining residual, which is < one quant step
+    resid = jnp.max(jnp.abs(acc_true - acc_comp))
+    assert float(resid) <= float(jnp.max(jnp.abs(state.error["w"]))) + 1e-5
+    assert float(resid) < 0.5
+
+
+def test_compression_preserves_convergence():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, total_steps=300,
+                      warmup_steps=5, clip_norm=10.0)
+    target = jnp.asarray(np.random.default_rng(3).normal(size=(8,)))
+    params = {"w": jnp.zeros((8,), jnp.float32)}
+    state = adamw_init(params, cfg)
+    comp = CompressionState.init(params)
+    for _ in range(300):
+        g = {"w": 2 * (params["w"] - target)}
+        g, comp = compress_error_feedback(g, comp)
+        params, state, _ = adamw_update(params, g, state, cfg)
+    assert float(jnp.max(jnp.abs(params["w"] - target))) < 5e-2

@@ -1,0 +1,64 @@
+"""ReRAM functional model: quantization + bit-slicing exactness."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.reram import (bit_slice, crossbar_matmul, map_mlp_to_arrays,
+                              quantize_weights)
+from repro.core.workload import PAPER_MODELS
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_bit_slice_roundtrip_exact(seed):
+    rng = np.random.default_rng(seed)
+    w = rng.integers(-127, 128, size=(rng.integers(1, 40),
+                                      rng.integers(1, 40)))
+    planes = bit_slice(w.astype(np.int32))
+    # recombine: sum(plane_p << 2p) - offset
+    u = sum(planes[p].astype(np.int64) << (2 * p)
+            for p in range(planes.shape[0]))
+    assert np.array_equal(u - 128, w)
+    assert planes.min() >= 0 and planes.max() <= 3
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_crossbar_matmul_is_integer_exact(seed):
+    rng = np.random.default_rng(seed)
+    n, m, b = rng.integers(1, 33, size=3)
+    x = rng.integers(-128, 128, size=(b, n)).astype(np.int32)
+    w = rng.integers(-127, 128, size=(n, m)).astype(np.int32)
+    planes = bit_slice(w)
+    out = crossbar_matmul(x, planes)
+    assert np.array_equal(out, x.astype(np.int64) @ w.astype(np.int64))
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_quantization_error_bounded(seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(16, 16)) * rng.uniform(0.1, 10)
+    w_int, scale = quantize_weights(w, bits=8)
+    assert np.max(np.abs(w_int * scale - w)) <= scale / 2 + 1e-12
+
+
+def test_no_accuracy_variation_property():
+    """Scheduling never changes math: the quantized network output is a
+    pure function of (weights, inputs) — crossbar evaluation equals plain
+    integer matmul regardless of any execution order. (The order only
+    changes WHEN values are computed; this pins the THAT.)"""
+    rng = np.random.default_rng(0)
+    x = rng.integers(-128, 128, size=(7, 24)).astype(np.int32)
+    w = rng.integers(-127, 128, size=(24, 12)).astype(np.int32)
+    planes = bit_slice(w)
+    ref = crossbar_matmul(x, planes)
+    perm = rng.permutation(7)
+    out_perm = crossbar_matmul(x[perm], planes)
+    assert np.array_equal(out_perm[np.argsort(perm)], ref)
+
+
+def test_paper_array_counts_scale_with_model():
+    counts = [map_mlp_to_arrays(PAPER_MODELS[m]).total_arrays
+              for m in ("model0", "model1", "model2")]
+    assert counts[0] < counts[1] < counts[2] <= 768

@@ -1,0 +1,90 @@
+"""Algorithm 1 (scheduling) properties — the paper's core contribution."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (MODE_PRESETS, PAPER_MODELS, PointNetConfig,
+                        PointNetWorkload, SALayerSpec, build_plan,
+                        greedy_nn_order, morton_order)
+
+
+def tiny_config(n=64, c1=24, c2=8, k=4):
+    return PointNetConfig(name="tiny", n_points=n, layers=(
+        SALayerSpec(n_centers=c1, n_neighbors=k, in_features=4,
+                    mlp=(4, 8, 8, 16)),
+        SALayerSpec(n_centers=c2, n_neighbors=k, in_features=16,
+                    mlp=(16, 16, 16, 32)),
+    ))
+
+
+@pytest.fixture(scope="module")
+def workload():
+    return PointNetWorkload.random(tiny_config(), seed=1)
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 64))
+@settings(max_examples=25, deadline=None)
+def test_greedy_order_is_permutation(seed, n):
+    pts = np.random.default_rng(seed).normal(size=(n, 3))
+    order = greedy_nn_order(pts)
+    assert sorted(order.tolist()) == list(range(n))
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 64))
+@settings(max_examples=25, deadline=None)
+def test_morton_order_is_permutation(seed, n):
+    pts = np.random.default_rng(seed).normal(size=(n, 3))
+    order = morton_order(pts)
+    assert sorted(order.tolist()) == list(range(n))
+
+
+def test_greedy_chain_is_locally_nearest(workload):
+    pts = workload.points[2]
+    order = greedy_nn_order(pts, start=0)
+    remaining = set(range(len(pts)))
+    for i in range(len(order) - 1):
+        remaining.discard(int(order[i]))
+        d = np.sum((pts[list(remaining)] - pts[order[i]]) ** 2, axis=1)
+        chosen = np.sum((pts[order[i + 1]] - pts[order[i]]) ** 2)
+        assert chosen <= d.min() + 1e-12
+
+
+@pytest.mark.parametrize("mode", list(MODE_PRESETS))
+def test_every_plan_executes_each_point_exactly_once(workload, mode):
+    plan = build_plan(workload, **MODE_PRESETS[mode])
+    for k in (1, 2):
+        order = plan.order_of(k)
+        n_k = workload.points[k].shape[0]
+        assert sorted(order.tolist()) == list(range(n_k))
+    from collections import Counter
+    c = Counter(plan.trace)
+    assert all(v == 1 for v in c.values())
+    assert len(plan.trace) == sum(workload.points[k].shape[0]
+                                  for k in (1, 2))
+
+
+def test_coordinated_trace_respects_dependencies(workload):
+    """A layer-2 point executes only after its whole receptive field."""
+    plan = build_plan(workload, intra="greedy", coordinated=True)
+    done = set()
+    for (layer, i) in plan.trace:
+        if layer == 2:
+            for m in workload.neighbors[2][i]:
+                assert (1, int(m)) in done, "dependency violated"
+        done.add((layer, i))
+
+
+def test_layer_by_layer_trace_orders_layers(workload):
+    plan = build_plan(workload, intra="index", coordinated=False)
+    layers = [k for (k, _) in plan.trace]
+    assert layers == sorted(layers)
+
+
+def test_paper_models_have_expected_structure():
+    for name, cfg in PAPER_MODELS.items():
+        assert cfg.n_points == 1024
+        assert cfg.layers[0].n_centers == 512
+        assert cfg.layers[1].n_centers == 128
+        assert all(l.n_neighbors == 16 for l in cfg.layers)
+    assert PAPER_MODELS["model0"].layers[0].mlp == (4, 64, 64, 128)
+    assert PAPER_MODELS["model2"].layers[1].mlp == (512, 512, 512, 1024)
