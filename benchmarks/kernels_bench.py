@@ -15,8 +15,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import PAPER_MODELS, PointNetWorkload, build_plan
-from repro.kernels import (aggregate_diff, count_dma_elisions, encode_planes,
-                           fps, reram_linear, reram_matmul_int)
+from repro.kernels import (aggregate_diff, build_program, count_dma_elisions,
+                           encode_planes, fps, reram_linear, reram_matmul_int,
+                           reram_mlp_fused)
 from .common import row
 
 
@@ -66,4 +67,24 @@ def kernels(iters=3):
     w = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
     us = _time(lambda a, b: reram_linear(a, b), x, w, iters=iters)
     rows.append(row("kernel/reram_linear/256", us, "int8-exact"))
+    # fused 3-stage SA MLP (1 pallas_call, weights programmed once) vs the
+    # per-layer reram_linear chain (3 launches, weights re-encoded per trace)
+    widths = PAPER_MODELS["model0"].layers[0].mlp       # (4, 64, 64, 128)
+    mlp = [{"w": jnp.asarray(rng.normal(size=(k, n)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(n,)), jnp.float32)}
+           for k, n in zip(widths[:-1], widths[1:])]
+    prog = build_program(mlp)                           # program time, once
+    x = jnp.asarray(rng.normal(size=(512, widths[0])), jnp.float32)
+
+    def chain(a):
+        for lyr in mlp:
+            a = jnp.maximum(reram_linear(a, lyr["w"], lyr["b"]), 0.0)
+        return a
+
+    us_f = _time(lambda a: reram_mlp_fused(a, prog), x, iters=iters)
+    us_s = _time(chain, x, iters=iters)
+    rows.append(row(
+        f"kernel/fused_mlp/512x{'-'.join(map(str, widths))}", us_f,
+        f"sequential_us={us_s:.3f};speedup={us_s / max(us_f, 1e-9):.2f}x;"
+        f"launches=1_vs_{len(mlp)}"))
     return rows

@@ -59,14 +59,28 @@ class ExecutionPlan:
         return self.orders[layer - 1]
 
 
+#: Above this many points ``greedy_nn_order`` recomputes distances per step
+#: instead of materializing the O(n^2) pairwise matrix (n=2048 -> 32 MB).
+GREEDY_DENSE_LIMIT = 2048
+
+
 def greedy_nn_order(points: np.ndarray, start: int = 0) -> np.ndarray:
     """Paper Algorithm 1, lines 1-8: repeatedly append the unscheduled point
-    nearest to the last scheduled one. O(n^2) with a vectorized inner step —
-    n is the last layer's size (128 in the paper), so this is tiny; the
-    hardware order generator reuses distances already computed by FPS."""
+    nearest to the last scheduled one. n is the last layer's size (128 in
+    the paper), so for n <= GREEDY_DENSE_LIMIT the full pairwise distance
+    matrix is precomputed once and each step is a masked argmin over a row
+    — the per-step ``np.sum((points - points[cur])**2)`` recompute only
+    remains as the large-n fallback. The coordinate-wise accumulation below
+    reproduces ``np.sum(..., axis=1)`` rounding exactly, so the order is
+    bit-identical to the per-step variant (regression-tested)."""
     n = points.shape[0]
     if n == 0:
         return np.empty(0, dtype=np.int64)
+    dense = n <= GREEDY_DENSE_LIMIT
+    if dense:
+        d2 = (points[:, 0, None] - points[None, :, 0]) ** 2
+        for c in range(1, points.shape[1]):
+            d2 += (points[:, c, None] - points[None, :, c]) ** 2
     remaining = np.ones(n, dtype=bool)
     order = np.empty(n, dtype=np.int64)
     cur = int(start)
@@ -75,8 +89,11 @@ def greedy_nn_order(points: np.ndarray, start: int = 0) -> np.ndarray:
         remaining[cur] = False
         if i == n - 1:
             break
-        d = np.sum((points - points[cur]) ** 2, axis=1)
-        d[~remaining] = np.inf
+        if dense:
+            d = np.where(remaining, d2[cur], np.inf)
+        else:
+            d = np.sum((points - points[cur]) ** 2, axis=1)
+            d[~remaining] = np.inf
         cur = int(np.argmin(d))
     return order
 

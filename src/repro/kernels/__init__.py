@@ -1,6 +1,12 @@
 """Pallas TPU kernels for the compute hot-spots the paper optimizes.
 
 - ``reram_mlp``  : bit-sliced weight-stationary INT8 matmul (contribution 1)
+- ``program``    : CrossbarProgram — weights quantized + plane-encoded once
+                   at "program time", resident thereafter (the crossbar
+                   programming lifecycle)
+- ``fused_mlp``  : whole multi-layer MLP in ONE pallas_call, inter-layer
+                   activations in VMEM scratch (inter-layer coordination
+                   applied inside feature computation)
 - ``aggregate``  : scalar-prefetch neighbor gather + difference (the
                    irregular access that contributions 2/3 optimize)
 - ``fps_update`` : FPS distance relaxation (front-end hot loop)
@@ -9,12 +15,14 @@ Every kernel has a pure-jnp oracle in ``ref.py`` and a jit'd public wrapper
 in ``ops.py``; they are validated on CPU with ``interpret=True`` and target
 TPU (BlockSpec VMEM tiling, 128-aligned) for deployment.
 """
+from .fused_mlp import reram_mlp_fused
 from .ops import (aggregate_diff, count_dma_elisions, encode_planes, fps,
                   fps_update, on_tpu, quantize_tensor, reram_linear)
+from .program import CrossbarProgram, build_program
 from .reram_mlp import reram_matmul_int
 
 __all__ = [
-    "aggregate_diff", "count_dma_elisions", "encode_planes", "fps",
-    "fps_update", "on_tpu", "quantize_tensor", "reram_linear",
-    "reram_matmul_int",
+    "CrossbarProgram", "aggregate_diff", "build_program",
+    "count_dma_elisions", "encode_planes", "fps", "fps_update", "on_tpu",
+    "quantize_tensor", "reram_linear", "reram_matmul_int", "reram_mlp_fused",
 ]

@@ -1,0 +1,163 @@
+"""Pallas TPU kernel: fused multi-layer weight-stationary MLP (DESIGN.md §3.3).
+
+The paper's inter-layer coordination keeps intermediate results on-chip
+instead of round-tripping to DRAM. Applied *inside* feature computation,
+the TPU twin is: run an entire SA-layer MLP (matmul -> bias+ReLU ->
+matmul -> bias+ReLU -> matmul) in ONE ``pallas_call``, with inter-layer
+activations living in a VMEM scratch buffer — 1 kernel launch instead of
+3, zero HBM round-trips between stages.
+
+Grid is ``(L, M/bm)`` with the layer index outermost and executed
+sequentially: layer ``l`` streams every activation stripe through layer
+``l``'s VMEM-resident planes (weight-stationary) before layer ``l+1``
+starts. A running max over layer ``l``'s masked outputs (SMEM scratch)
+finalizes into the *global per-tensor* activation scale right before
+layer ``l+1``'s first stripe — so intermediate re-quantization uses
+exactly the same scale the sequential ``reram_linear`` chain computes.
+
+Numerics contract (asserted in ``tests/test_fused_mlp.py``): the integer
+crossbar pipeline — quantize, plane shift-and-add, offset-binary
+correction, requantize — is *exact*, identical to the per-layer path.
+With zero biases the kernel matches the correctly-rounded NumPy oracle
+of the quantized chain BITWISE on arbitrary float inputs; with biases
+the dequant multiply-add may be FMA-contracted by XLA, so fused vs the
+separately-compiled per-layer path agree to ~1 ulp (the per-layer path
+itself deviates from the NumPy oracle by the same margin) — at most 1
+quant LSB after requantization, and zero integer drift.
+
+All layers are padded to the program's uniform ``d_pad`` edge. Padded
+*columns* of the planes encode cell value 0 (which decodes to weight
+-2^(b-1)), so their outputs are garbage — masked to zero before the max
+and before feeding the next layer, mirroring the per-layer path's slice
+to real shape. Padded *rows* (M) are likewise zero-masked. VMEM budget:
+``planes`` (L*P*d^2 int8) + ``act`` (M_pad*d f32) must fit on-chip on a
+real TPU; d <= 512 and M-striping keep the paper's models inside 16 MB,
+larger programs would need the N/K-tiled variant (ROADMAP open item).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .program import CrossbarProgram, quantize_tensor
+
+__all__ = ["reram_mlp_fused"]
+
+DEFAULT_BLOCK_M = 128   # activation stripe height (crossbar geometry)
+
+
+def _kernel(x0_ref, planes_ref, bias_ref, sw_ref, sx0_ref, mask_ref,
+            o_ref, act_ref, s_ref, mx_ref, *,
+            n_layers: int, n_planes: int, cell_bits: int, weight_bits: int,
+            block_m: int, m_real: int, final_relu: bool):
+    l = pl.program_id(0)            # layer (outermost, sequential)
+    i = pl.program_id(1)            # activation stripe
+    qmax = float(2 ** (weight_bits - 1) - 1)
+
+    @pl.when(i == 0)
+    def _start_layer():
+        # finalize this layer's global input scale: the external quant scale
+        # for layer 0, else max|prev layer output| / qmax (quantize_tensor)
+        s_ref[0] = jnp.where(
+            l == 0, sx0_ref[0, 0],
+            jnp.maximum(mx_ref[0] / qmax, 1e-12))
+        mx_ref[0] = jnp.float32(0)  # start accumulating the next layer's max
+
+    s = s_ref[0]
+    rows = pl.ds(i * block_m, block_m)
+    # layer input stripe: pre-quantized ints for layer 0, else re-quantize
+    # the VMEM-resident float activations written by layer l-1
+    x_q = jnp.clip(jnp.round(act_ref[rows, :] / s), -qmax, qmax
+                   ).astype(jnp.int32)
+    x_int = jnp.where(l == 0, x0_ref[...].astype(jnp.int32), x_q)
+
+    # bit-sliced crossbar matmul: shift-and-add over the 2-bit cell planes
+    acc = jnp.zeros(o_ref.shape, jnp.int32)
+    for p in range(n_planes):
+        w = planes_ref[0, p].astype(jnp.int32)
+        part = jax.lax.dot_general(x_int, w, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.int32)
+        acc = acc + (part << (cell_bits * p))
+    xsum = jnp.sum(x_int, axis=1, keepdims=True)
+    y_int = acc - (xsum << (weight_bits - 1))   # offset-binary correction
+
+    # dequantize + bias + ReLU (the inter-layer stage that used to round-trip
+    # through HBM), then zero the padded rows/columns exactly as the
+    # sequential path's slice-to-real-shape does
+    y = y_int.astype(jnp.float32) * (s * sw_ref[0, 0]) + bias_ref[...]
+    do_relu = jnp.logical_or(l < n_layers - 1, final_relu)
+    y = jnp.where(do_relu, jnp.maximum(y, 0.0), y)
+    y = y * mask_ref[...]
+    row_ids = i * block_m + jax.lax.broadcasted_iota(
+        jnp.int32, (block_m, 1), 0)
+    y = jnp.where(row_ids < m_real, y, 0.0)
+
+    mx_ref[0] = jnp.maximum(mx_ref[0], jnp.max(jnp.abs(y)))
+    act_ref[rows, :] = y                        # stays in VMEM for layer l+1
+
+    @pl.when(l == n_layers - 1)                 # only the last layer's
+    def _store():                               # stripes reach the output
+        o_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("final_relu", "block_m",
+                                             "interpret"))
+def reram_mlp_fused(x: jnp.ndarray, program: CrossbarProgram, *,
+                    final_relu: bool = True,
+                    block_m: int = DEFAULT_BLOCK_M,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Float ``(…, d0)`` through the whole programmed MLP -> ``(…, dL)``,
+    in a single ``pallas_call``. Same quantization scales and exact same
+    integer arithmetic as chaining ``reram_linear`` + bias + ReLU per layer
+    (float dequant agrees to FMA-contraction ulps — see module docstring),
+    with zero weight encoding in the hot path."""
+    if program.weight_bits > 8:
+        raise ValueError(
+            f"reram_mlp_fused streams int8 activations (the 128x128 INT8 "
+            f"crossbar geometry); weight_bits={program.weight_bits} > 8 "
+            f"would overflow them")
+    widths = program.widths
+    d = program.d_pad
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, widths[0])
+    m0 = x2.shape[0]
+    x_int, sx = quantize_tensor(x2, bits=program.weight_bits)
+
+    m_pad = -(-max(m0, 1) // block_m) * block_m
+    x_p = jnp.zeros((m_pad, d), jnp.int8).at[:m0, :widths[0]].set(
+        x_int.astype(jnp.int8))
+    m_steps = m_pad // block_m
+    n_layers, n_planes = program.n_layers, program.n_planes
+
+    kernel = functools.partial(
+        _kernel, n_layers=n_layers, n_planes=n_planes,
+        cell_bits=program.cell_bits, weight_bits=program.weight_bits,
+        block_m=block_m, m_real=m0, final_relu=final_relu)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_layers, m_steps),
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda l, i: (i, 0)),
+            pl.BlockSpec((1, n_planes, d, d), lambda l, i: (l, 0, 0, 0)),
+            pl.BlockSpec((1, d), lambda l, i: (l, 0)),
+            pl.BlockSpec((1, 1), lambda l, i: (l, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda l, i: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, d), lambda l, i: (l, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, d), lambda l, i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((m_pad, d), jnp.float32),   # inter-layer activations
+            pltpu.SMEM((1,), jnp.float32),         # current layer act scale
+            pltpu.SMEM((1,), jnp.float32),         # running max|output|
+        ],
+        interpret=interpret,
+    )(x_p, program.planes, program.bias, program.w_scale,
+      sx.reshape(1, 1).astype(jnp.float32), program.col_mask)
+    return out[:m0, :widths[-1]].reshape(*lead, widths[-1])

@@ -2,7 +2,12 @@
 
 ``reram_linear`` is the drop-in MLP backend ("--mlp-backend reram"): float
 in / float out, INT8 symmetric quantization on both operands, bit-sliced
-crossbar matmul in the integer domain (exact), dequantized output.
+crossbar matmul in the integer domain (exact), dequantized output. Note it
+re-quantizes and re-encodes the weight planes on every traced call — the
+weight-stationary path (``mlp_backend='reram-fused'``) builds a
+``CrossbarProgram`` once instead and runs the whole MLP through
+``reram_mlp_fused``; ``reram_linear`` is kept as the per-layer reference
+the fused kernel is tested bit-exact against.
 """
 from __future__ import annotations
 
@@ -14,6 +19,7 @@ import numpy as np
 
 from .aggregate import aggregate_diff
 from .fps_update import fps_update
+from .program import encode_planes, quantize_tensor
 from .reram_mlp import reram_matmul_int
 from .ref import combine_planes
 
@@ -25,24 +31,6 @@ __all__ = [
 
 def on_tpu() -> bool:
     return jax.devices()[0].platform == "tpu"
-
-
-def quantize_tensor(x: jnp.ndarray, bits: int = 8):
-    """Symmetric per-tensor quantization -> (int32 values, float scale)."""
-    qmax = float(2 ** (bits - 1) - 1)
-    scale = jnp.maximum(jnp.max(jnp.abs(x)) / qmax, 1e-12)
-    return jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32), scale
-
-
-def encode_planes(w_int: jnp.ndarray, weight_bits: int = 8,
-                  cell_bits: int = 2) -> jnp.ndarray:
-    """Signed int weights -> (P, K, N) offset-binary cell planes."""
-    offset = 1 << (weight_bits - 1)
-    u = (w_int + offset).astype(jnp.uint32)
-    n_planes = -(-weight_bits // cell_bits)
-    mask = (1 << cell_bits) - 1
-    return jnp.stack([((u >> (cell_bits * p)) & mask).astype(jnp.int8)
-                      for p in range(n_planes)])
 
 
 def _pad_to(x, axis, mult):
@@ -80,7 +68,7 @@ def fps(points: jnp.ndarray, n_samples: int, *, start: int = 0,
         interpret: bool = True) -> jnp.ndarray:
     """Full farthest-point sampling driven by the ``fps_update`` kernel."""
     n = points.shape[0]
-    pts_t = _pad_to(points.T, 1, 128)               # (3, Nـpad)
+    pts_t = _pad_to(points.T, 1, 128)               # (3, N_pad)
     n_pad = pts_t.shape[1]
     valid = (jnp.arange(n_pad) < n)[None, :]
 

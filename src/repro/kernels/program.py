@@ -1,0 +1,163 @@
+"""Weight-stationary crossbar programs (DESIGN.md §3.2).
+
+In the Pointer accelerator, MLP weights are *programmed into the ReRAM
+crossbars once* and stay resident while activations stream through. The
+TPU twin of that lifecycle is a :class:`CrossbarProgram`: all weights of
+one MLP are quantized and bit-plane-encoded exactly once at "program
+time", padded to the crossbar/MXU geometry, and stacked into a uniform
+pytree of VMEM-ready tensors. The per-forward hot path only streams
+activations — ``encode_planes``/``quantize_tensor`` never run on weights
+inside a jitted forward again (tests count the calls via monkeypatch).
+
+``quantize_tensor`` and ``encode_planes`` live here (program time is
+their natural home); ``repro.kernels.ops`` re-exports them so existing
+imports keep working.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .ref import combine_planes
+
+__all__ = [
+    "CrossbarProgram", "build_program", "quantize_tensor", "encode_planes",
+]
+
+#: Crossbar / MXU tile edge — every program dimension is padded to this.
+CROSSBAR = 128
+
+
+def quantize_tensor(x: jnp.ndarray, bits: int = 8):
+    """Symmetric per-tensor quantization -> (int32 values, float scale)."""
+    qmax = float(2 ** (bits - 1) - 1)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)) / qmax, 1e-12)
+    return jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32), scale
+
+
+def encode_planes(w_int: jnp.ndarray, weight_bits: int = 8,
+                  cell_bits: int = 2) -> jnp.ndarray:
+    """Signed int weights -> (P, K, N) offset-binary cell planes."""
+    offset = 1 << (weight_bits - 1)
+    u = (w_int + offset).astype(jnp.uint32)
+    n_planes = -(-weight_bits // cell_bits)
+    mask = (1 << cell_bits) - 1
+    return jnp.stack([((u >> (cell_bits * p)) & mask).astype(jnp.int8)
+                      for p in range(n_planes)])
+
+
+def _ceil_to(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+def _pad2(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 2)
+                   + [(0, rows - x.shape[-2]), (0, cols - x.shape[-1])])
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class CrossbarProgram:
+    """One MLP, programmed. All layers padded to a uniform ``d_pad`` edge so
+    the fused kernel (``fused_mlp.py``) can index them with one BlockSpec.
+
+    planes  : (L, P, d_pad, d_pad) int8 offset-binary 2-bit cell planes
+    bias    : (L, d_pad) float32, zero beyond each layer's real width
+    w_scale : (L, 1) float32 per-layer weight quantization scale
+    col_mask: (L, d_pad) float32, 1.0 on each layer's real output columns
+    widths  : static (d0, ..., dL) — the original float MLP widths
+    """
+
+    planes: jnp.ndarray
+    bias: jnp.ndarray
+    w_scale: jnp.ndarray
+    col_mask: jnp.ndarray
+    widths: tuple[int, ...]
+    weight_bits: int = 8
+    cell_bits: int = 2
+
+    # -- pytree protocol (widths & bit layout are static aux data) ----------
+    def tree_flatten(self):
+        return ((self.planes, self.bias, self.w_scale, self.col_mask),
+                (self.widths, self.weight_bits, self.cell_bits))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.widths) - 1
+
+    @property
+    def n_planes(self) -> int:
+        return -(-self.weight_bits // self.cell_bits)
+
+    @property
+    def d_pad(self) -> int:
+        return self.planes.shape[-1]
+
+    # -- decode: the crossbar read-out path, for round-trip tests ----------
+    def int_weights(self) -> list[jnp.ndarray]:
+        """Per-layer signed int32 weights recombined from the cell planes
+        (exact inverse of the encode step, real shapes restored)."""
+        return [combine_planes(self.planes[l], self.cell_bits,
+                               self.weight_bits)[:k, :n]
+                for l, (k, n) in enumerate(zip(self.widths[:-1],
+                                               self.widths[1:]))]
+
+    def weights(self) -> list[jnp.ndarray]:
+        """Per-layer dequantized float32 weights (within quant tolerance of
+        the floats the program was built from)."""
+        return [w.astype(jnp.float32) * self.w_scale[l, 0]
+                for l, w in enumerate(self.int_weights())]
+
+    def biases(self) -> list[jnp.ndarray]:
+        return [self.bias[l, :n] for l, n in enumerate(self.widths[1:])]
+
+
+def build_program(layers: Sequence, *, weight_bits: int = 8,
+                  cell_bits: int = 2) -> CrossbarProgram:
+    """Program an MLP into crossbars: quantize + plane-encode every layer
+    exactly once, pad to the 128x128 geometry, stack into one pytree.
+
+    ``layers``: sequence of ``{"w": (k, n), "b": (n,)}`` dicts (the
+    ``pointnet2`` parameter layout) or ``(w, b)`` tuples.
+    """
+    wbs = []
+    for lyr in layers:
+        if isinstance(lyr, dict):
+            wbs.append((jnp.asarray(lyr["w"]), jnp.asarray(lyr["b"])))
+        else:
+            w, b = lyr
+            wbs.append((jnp.asarray(w), jnp.asarray(b)))
+    widths = [wbs[0][0].shape[0]]
+    for w, b in wbs:
+        if w.shape[0] != widths[-1]:
+            raise ValueError(f"MLP widths do not chain: {w.shape} after "
+                             f"{widths}")
+        if b.shape != (w.shape[1],):
+            raise ValueError(f"bias {b.shape} does not match weight {w.shape}")
+        widths.append(w.shape[1])
+    d = _ceil_to(max(widths), CROSSBAR)
+
+    planes, bias, scale, mask = [], [], [], []
+    for w, b in wbs:
+        w_int, sw = quantize_tensor(w, bits=weight_bits)
+        p = encode_planes(w_int, weight_bits=weight_bits, cell_bits=cell_bits)
+        planes.append(_pad2(p, d, d))
+        bias.append(jnp.pad(b.astype(jnp.float32), (0, d - b.shape[0])))
+        scale.append(sw)
+        mask.append((jnp.arange(d) < w.shape[1]).astype(jnp.float32))
+    return CrossbarProgram(
+        planes=jnp.stack(planes),
+        bias=jnp.stack(bias),
+        w_scale=jnp.stack(scale).reshape(-1, 1).astype(jnp.float32),
+        col_mask=jnp.stack(mask),
+        widths=tuple(widths),
+        weight_bits=weight_bits,
+        cell_bits=cell_bits,
+    )

@@ -14,10 +14,23 @@ geometry functions are the JAX twins of the NumPy ones in
 dry-run/trainer lower, while ``repro.core`` is what the accelerator
 simulator consumes.
 
-The MLP can run through the ReRAM path (``mlp_backend='reram'``), which
-applies the same INT8 / 2-bit-cell bit-sliced arithmetic as the crossbar
-(via ``repro.kernels``) — numerically identical to the quantized network,
-demonstrating the paper's no-accuracy-variation property.
+The MLP supports three backends:
+
+  float         : plain ``a @ w`` (default; ``matmul=None``)
+  'reram'       : pass ``matmul=reram_linear`` — same INT8 / 2-bit-cell
+                  bit-sliced arithmetic as the crossbar, but weights are
+                  re-quantized and re-plane-encoded inside every traced
+                  call, and each MLP stage is its own kernel launch
+  'reram-fused' : pass ``program=build_model_program(params)`` —
+                  the weight-stationary path. Weights are encoded exactly
+                  once at program time (mirroring crossbar programming);
+                  each SA-layer MLP and the head run as ONE fused
+                  ``pallas_call`` with inter-layer activations in VMEM
+                  (``repro.kernels.fused_mlp``).
+
+Both ReRAM backends are numerically the quantized network (paper's
+no-accuracy-variation property); the fused path shares the per-layer
+path's integer arithmetic exactly.
 """
 from __future__ import annotations
 
@@ -29,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.workload import PointNetConfig, SALayerSpec
+from repro.kernels import build_program, reram_mlp_fused
 
 Params = Any
 
@@ -89,6 +103,17 @@ def init_params(key, config: PointNetConfig, n_classes: int = 40,
     return {"sa": sa, "head": head}
 
 
+def build_model_program(params: Params) -> dict:
+    """Program every MLP of the model into crossbars ('reram-fused'
+    backend): one :class:`~repro.kernels.CrossbarProgram` per SA layer plus
+    one for the classification head. Weights are quantized and
+    plane-encoded here, exactly once — pass the result to
+    ``forward``/``batched_forward`` and the per-forward hot path never
+    touches ``encode_planes``/``quantize_tensor`` on weights again."""
+    return {"sa": [build_program(mlp) for mlp in params["sa"]],
+            "head": build_program(params["head"])}
+
+
 # ---------------------------------------------------------------------------
 # feature processing
 # ---------------------------------------------------------------------------
@@ -115,38 +140,53 @@ def lift_features(points: jnp.ndarray, n_features: int) -> jnp.ndarray:
 
 
 def sa_layer(mlp_params, spec: SALayerSpec, points, features, *,
-             matmul=None):
+             matmul=None, program=None):
     """One set-abstraction layer on a single cloud.
-    points (N, 3), features (N, C_in) -> (M, 3), (M, C_out)."""
+    points (N, 3), features (N, C_in) -> (M, 3), (M, C_out).
+    With ``program`` set, the 3-stage MLP runs as a single fused
+    ``pallas_call`` over the pre-encoded weight-stationary planes."""
     centers = farthest_point_sample(points, spec.n_centers)
     c_pts = points[centers]
     nbr = knn(c_pts, points, spec.n_neighbors)          # (M, K)
     f_nbr = features[nbr]                               # (M, K, C)
     f_ctr = features[centers][:, None, :]
     diff = f_nbr - f_ctr                                # aggregation D(.)
-    h = _apply_mlp(mlp_params, diff, matmul=matmul)     # feature comp. M(.)
+    if program is not None:
+        h = reram_mlp_fused(diff, program)              # feature comp. M(.)
+    else:
+        h = _apply_mlp(mlp_params, diff, matmul=matmul)
     out = jnp.max(h, axis=1)                            # reduction
     return c_pts, out
 
 
 def forward(params: Params, config: PointNetConfig, cloud: jnp.ndarray, *,
-            matmul=None) -> jnp.ndarray:
-    """Single-cloud forward: (N, 3) -> logits (n_classes,)."""
+            matmul=None, program=None) -> jnp.ndarray:
+    """Single-cloud forward: (N, 3) -> logits (n_classes,).
+    ``program`` (from :func:`build_model_program`) selects the
+    'reram-fused' backend: every SA MLP and the head dispatch through
+    ``reram_mlp_fused`` — one kernel launch per MLP instead of one per
+    matmul, and no weight encoding in the hot path."""
     feats = lift_features(cloud, config.layers[0].in_features)
     pts = cloud
-    for mlp_params, spec in zip(params["sa"], config.layers):
-        pts, feats = sa_layer(mlp_params, spec, pts, feats, matmul=matmul)
+    for i, spec in enumerate(config.layers):
+        pts, feats = sa_layer(
+            params["sa"][i] if params is not None else None, spec, pts,
+            feats, matmul=matmul,
+            program=program["sa"][i] if program is not None else None)
     g = jnp.max(feats, axis=0)                          # global max pool
+    if program is not None:
+        return reram_mlp_fused(g, program["head"], final_relu=False)
     return _apply_mlp(params["head"], g, final_relu=False, matmul=matmul)
 
 
-def batched_forward(params, config, clouds, *, matmul=None):
-    return jax.vmap(lambda c: forward(params, config, c, matmul=matmul)
-                    )(clouds)
+def batched_forward(params, config, clouds, *, matmul=None, program=None):
+    return jax.vmap(lambda c: forward(params, config, c, matmul=matmul,
+                                      program=program))(clouds)
 
 
-def loss_fn(params, config, clouds, labels, *, matmul=None):
-    logits = batched_forward(params, config, clouds, matmul=matmul)
+def loss_fn(params, config, clouds, labels, *, matmul=None, program=None):
+    logits = batched_forward(params, config, clouds, matmul=matmul,
+                             program=program)
     logp = jax.nn.log_softmax(logits)
     nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
     acc = (jnp.argmax(logits, axis=1) == labels).mean()

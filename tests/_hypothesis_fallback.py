@@ -1,0 +1,83 @@
+"""Deterministic miniature stand-in for ``hypothesis``.
+
+The property tests in this suite use a small slice of the hypothesis API
+(``given`` / ``settings`` / ``st.integers`` / ``st.sampled_from``). When
+hypothesis is installed (see requirements-dev.txt) the real library is
+used; when it is not, test modules fall back to this shim so the suite
+still *runs* the properties as a fixed-seed example sweep instead of
+failing at collection. No shrinking, no database — just a reproducible
+parameter sweep capped at ``FALLBACK_MAX_EXAMPLES`` per test.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+FALLBACK_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elems = list(elements)
+    return _Strategy(lambda rng: elems[rng.randrange(len(elems))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+class st:
+    """Namespace mimic for ``from hypothesis import strategies as st``."""
+
+    integers = staticmethod(integers)
+    sampled_from = staticmethod(sampled_from)
+    booleans = staticmethod(booleans)
+
+
+def settings(**kwargs):
+    """Records ``max_examples``; every other option is irrelevant here."""
+    def deco(fn):
+        fn._fallback_settings = dict(kwargs)
+        return fn
+    return deco
+
+
+def given(*strategies, **kw_strategies):
+    """Run the test over a fixed-seed sweep of drawn examples. Works with
+    ``@settings`` stacked above or below (the attribute is read off the
+    wrapper at call time; ``functools.wraps`` propagates it either way)."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_fallback_settings", {})
+            n = min(cfg.get("max_examples", FALLBACK_MAX_EXAMPLES),
+                    FALLBACK_MAX_EXAMPLES)
+            rng = random.Random(0xC0FFEE)
+            for _ in range(n):
+                drawn = [s.draw(rng) for s in strategies]
+                kdrawn = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                fn(*args, *drawn, **kdrawn, **kwargs)
+        # hide the strategy-filled parameters from pytest, which would
+        # otherwise try to resolve them as fixtures (real hypothesis does
+        # the same via its own pytest plugin)
+        filled = set(kw_strategies)
+        params = list(inspect.signature(fn).parameters.values())
+        if strategies:          # positional strategies fill from the right
+            params = params[:-len(strategies)]
+        wrapper.__signature__ = inspect.Signature(
+            [p for p in params if p.name not in filled])
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

@@ -1,0 +1,269 @@
+"""Fused multi-layer MLP kernel vs per-layer path vs float reference.
+
+Numerics contract (see ``fused_mlp.py``): the integer crossbar pipeline is
+exact; float dequant agrees with the separately-compiled per-layer path to
+~1 ulp (XLA FMA contraction). So exactness is asserted bitwise in
+*scale-controlled* regimes where every float op is IEEE-exact (quant scales
+are exact integers, all values exactly representable), and random-float
+equivalence is asserted at ulp-level tolerance far below one quant LSB.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # deterministic sweep, see _hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, st
+
+from repro.kernels import (CrossbarProgram, build_program, quantize_tensor,
+                           reram_linear, reram_mlp_fused)
+from repro.kernels.ref import combine_planes
+
+RNG = np.random.default_rng(0)
+
+
+def _mk_layers(widths, rng, zero_bias=False):
+    return [{"w": jnp.asarray(rng.normal(size=(k, n)), jnp.float32),
+             "b": jnp.zeros((n,), jnp.float32) if zero_bias else
+             jnp.asarray(rng.normal(size=(n,)), jnp.float32)}
+            for k, n in zip(widths[:-1], widths[1:])]
+
+
+def _sequential(layers, x, final_relu=True):
+    """The per-layer path: ``reram_linear`` chain exactly as ``_apply_mlp``
+    runs it with ``matmul=reram_linear``."""
+    y = x
+    for i, lyr in enumerate(layers):
+        y = reram_linear(y, lyr["w"]) + lyr["b"]
+        if final_relu or i < len(layers) - 1:
+            y = jax.nn.relu(y)
+    return y
+
+
+def _float_ref(layers, x, final_relu=True):
+    y = np.asarray(x, np.float64)
+    for i, lyr in enumerate(layers):
+        y = y @ np.asarray(lyr["w"], np.float64) + np.asarray(
+            lyr["b"], np.float64)
+        if final_relu or i < len(layers) - 1:
+            y = np.maximum(y, 0)
+    return y
+
+
+def _numpy_quant_chain(layers, x, final_relu=True):
+    """Correctly-rounded NumPy oracle of the quantized chain semantics:
+    float32 scale/quant/dequant ops (one rounding each, NumPy never
+    FMA-contracts), exact int64 matmuls."""
+    y = np.asarray(x, np.float32)
+    qmax = np.float32(127)
+    for i, lyr in enumerate(layers):
+        w = np.asarray(lyr["w"], np.float32)
+        b = np.asarray(lyr["b"], np.float32)
+        sx = np.maximum(np.max(np.abs(y)) / qmax, np.float32(1e-12))
+        xi = np.clip(np.round(y / sx), -qmax, qmax).astype(np.int64)
+        sw = np.maximum(np.max(np.abs(w)) / qmax, np.float32(1e-12))
+        wi = np.clip(np.round(w / sw), -qmax, qmax).astype(np.int64)
+        y = (xi @ wi).astype(np.float32) * (sx * sw) + b
+        if final_relu or i < len(layers) - 1:
+            y = np.maximum(y, np.float32(0))
+    return y
+
+
+# ---------------------------------------------------------------------------
+# exactness: scale-controlled regimes (every float op IEEE-exact)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(9, 5, 7), (37, 19, 23), (128, 128, 128),
+                                   (130, 70, 140)])
+def test_single_layer_integer_exact_vs_oracle(m, k, n):
+    """With max|x| = max|w| = 127 both quant scales are exactly 1.0, so the
+    fused float output must EQUAL the pure integer matmul oracle bitwise —
+    this proves the in-kernel plane shift-and-add + offset correction +
+    dequant pipeline is integer-exact."""
+    xi = RNG.integers(-127, 128, (m, k))
+    wi = RNG.integers(-127, 128, (k, n))
+    xi[0, 0] = 127
+    wi[0, 0] = 127
+    prog = build_program([{"w": jnp.asarray(wi, jnp.float32),
+                           "b": jnp.zeros((n,), jnp.float32)}])
+    out = reram_mlp_fused(jnp.asarray(xi, jnp.float32), prog,
+                          final_relu=False)
+    ref = (xi @ wi).astype(np.float32)
+    assert bool(jnp.all(out == ref))
+
+
+def test_three_layer_integer_exact_chain():
+    """Multi-layer exactness: layers 1-2 are 127*I and a 127*permutation, so
+    every requantization scale is an exact integer (127, then 127^2) and the
+    intermediate requant must reproduce the inputs exactly; layer 3 is a
+    random int crossbar. All float ops stay exact -> bitwise equality with
+    the pure-integer oracle across the whole fused 3-stage pipeline."""
+    k, n = 8, 12
+    x = RNG.integers(0, 128, (50, k))
+    x[0, 0] = 127                              # pins every scale
+    perm = np.eye(k)[RNG.permutation(k)]
+    w3 = RNG.integers(-127, 128, (k, n))
+    w3[0, 0] = 127
+    layers = [
+        {"w": jnp.asarray(127.0 * np.eye(k), jnp.float32),
+         "b": jnp.zeros((k,), jnp.float32)},
+        {"w": jnp.asarray(127.0 * perm, jnp.float32),
+         "b": jnp.zeros((k,), jnp.float32)},
+        {"w": jnp.asarray(w3, jnp.float32),
+         "b": jnp.zeros((n,), jnp.float32)},
+    ]
+    prog = build_program(layers)
+    out = reram_mlp_fused(jnp.asarray(x, jnp.float32), prog,
+                          final_relu=False)
+    ref = ((x @ perm.astype(np.int64)) @ w3).astype(np.float32) \
+        * np.float32(16129.0)                  # 127^2, the exact scale chain
+    assert bool(jnp.all(out == ref))
+
+
+@pytest.mark.parametrize("widths,m,final_relu", [
+    ((5, 7), 9, True),
+    ((3, 64, 10), 33, True),
+    ((4, 64, 64, 128), 516, True),
+    ((4, 64, 64, 128), 1, False),
+    ((130, 200, 70), 257, True),
+])
+def test_zero_bias_bitwise_vs_quantized_oracle(widths, m, final_relu):
+    """With zero biases every float op in the fused kernel is a single
+    correctly-rounded IEEE operation (no FMA-contraction site), so the
+    kernel must match the NumPy quantized-chain oracle BITWISE on random
+    floats — requantization scales, int pipeline and dequant all exact.
+    (The XLA-compiled per-layer path itself deviates from this oracle by
+    ~1 ulp, which is why the sequential comparison below uses tolerance.)"""
+    layers = _mk_layers(widths, np.random.default_rng(1), zero_bias=True)
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(m, widths[0])),
+                    jnp.float32)
+    fused = reram_mlp_fused(x, build_program(layers), final_relu=final_relu)
+    oracle = _numpy_quant_chain(layers, x, final_relu=final_relu)
+    assert np.array_equal(np.asarray(fused), oracle)
+
+
+# ---------------------------------------------------------------------------
+# equivalence: random floats, non-128 shapes, 1/2/3-layer MLPs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("widths,m", [
+    ((5, 7), 9),                 # 1 layer, tiny
+    ((17, 100, 2), 200),         # 2 layers, none 128-aligned
+    ((4, 64, 64, 128), 516),     # 3 layers, the paper's SA-1 shape
+    ((130, 200, 70), 257),       # 3-D of dims straddle a 128 boundary
+])
+def test_fused_matches_sequential_and_float(widths, m):
+    rng = np.random.default_rng(7)
+    layers = _mk_layers(widths, rng)
+    x = jnp.asarray(rng.normal(size=(m, widths[0])), jnp.float32)
+    fused = np.asarray(reram_mlp_fused(x, build_program(layers)))
+    seq = np.asarray(_sequential(layers, x))
+    # ulp-level agreement with the per-layer path (same ints, same scales)
+    np.testing.assert_allclose(fused, seq, rtol=1e-5,
+                               atol=1e-5 * max(1.0, np.abs(seq).max()))
+    # quantization-tolerance agreement with the float reference
+    ref = _float_ref(layers, x)
+    tol = 0.05 * np.abs(ref).max() + 0.1
+    assert np.max(np.abs(fused - ref)) <= tol
+
+
+def test_leading_dims_like_sa_layer():
+    """(M, K, C) activations — the sa_layer aggregation layout — flatten
+    through the fused kernel exactly like a (M*K, C) matrix."""
+    rng = np.random.default_rng(3)
+    layers = _mk_layers((8, 32, 16), rng)
+    prog = build_program(layers)
+    x = jnp.asarray(rng.normal(size=(13, 16, 8)), jnp.float32)
+    out3 = reram_mlp_fused(x, prog)
+    out2 = reram_mlp_fused(x.reshape(-1, 8), prog)
+    assert out3.shape == (13, 16, 16)
+    assert bool(jnp.all(out3 == out2.reshape(13, 16, 16)))
+
+
+# ---------------------------------------------------------------------------
+# CrossbarProgram: build-once semantics + round trip
+# ---------------------------------------------------------------------------
+
+def test_program_encodes_weights_exactly_once(monkeypatch):
+    """The weight-stationary contract: ``encode_planes`` runs once per layer
+    at program build, and NEVER in the per-forward hot path — not even at
+    trace time."""
+    from repro.kernels import program as program_mod
+    calls = []
+    real = program_mod.encode_planes
+    monkeypatch.setattr(program_mod, "encode_planes",
+                        lambda *a, **k: calls.append(1) or real(*a, **k))
+    rng = np.random.default_rng(5)
+    layers = _mk_layers((4, 32, 32, 16), rng)
+    prog = build_program(layers)
+    assert len(calls) == 3                     # once per layer, at build
+    x = jnp.asarray(rng.normal(size=(20, 4)), jnp.float32)
+    jax.block_until_ready(reram_mlp_fused(x, prog))
+    x2 = jnp.asarray(rng.normal(size=(20, 4)), jnp.float32)
+    jax.block_until_ready(reram_mlp_fused(x2, prog))
+    assert len(calls) == 3                     # zero encodes per forward
+
+
+@given(st.integers(0, 10_000), st.sampled_from([1, 2, 3]))
+@settings(max_examples=10, deadline=None)
+def test_program_round_trip(seed, n_layers):
+    """decode(encode(w)): the recombined int weights equal quantize(w)
+    exactly, and the dequantized floats are within half a quant step."""
+    rng = np.random.default_rng(seed)
+    widths = rng.integers(1, 70, size=n_layers + 1).tolist()
+    layers = _mk_layers(widths, rng)
+    prog = build_program(layers)
+    assert prog.widths == tuple(widths)
+    for lyr, w_int, w_deq, b in zip(layers, prog.int_weights(),
+                                    prog.weights(), prog.biases()):
+        qi, s = quantize_tensor(lyr["w"])
+        assert w_int.shape == lyr["w"].shape
+        assert bool(jnp.all(w_int == qi))
+        assert float(jnp.max(jnp.abs(w_deq - lyr["w"]))) <= float(s) / 2 + 1e-6
+        assert bool(jnp.all(b == lyr["b"]))
+
+
+def test_program_padding_and_pytree():
+    layers = _mk_layers((5, 200, 7), np.random.default_rng(9))
+    prog = build_program(layers)
+    assert prog.d_pad == 256 and prog.n_layers == 2 and prog.n_planes == 4
+    assert prog.planes.shape == (2, 4, 256, 256)
+    # padded plane cells are 0 and col_mask kills the garbage columns
+    assert int(prog.col_mask[1].sum()) == 7
+    # jit/vmap treat it as a pytree with static widths
+    leaves, treedef = jax.tree_util.tree_flatten(prog)
+    prog2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert prog2.widths == prog.widths
+
+
+# ---------------------------------------------------------------------------
+# end to end: PointNet++ 'reram-fused' backend
+# ---------------------------------------------------------------------------
+
+def test_pointnet_fused_backend_matches_per_layer():
+    from repro.core.workload import PointNetConfig, SALayerSpec
+    from repro.models import pointnet2 as pn
+    cfg = PointNetConfig(name="tiny", n_points=64, layers=(
+        SALayerSpec(n_centers=24, n_neighbors=4, in_features=4,
+                    mlp=(4, 8, 8, 16)),
+        SALayerSpec(n_centers=8, n_neighbors=4, in_features=16,
+                    mlp=(16, 16, 16, 32)),
+    ))
+    params = pn.init_params(jax.random.PRNGKey(0), cfg, n_classes=10)
+    prog = pn.build_model_program(params)
+    cloud = jnp.asarray(np.random.default_rng(11).normal(size=(64, 3)),
+                        jnp.float32)
+    fused = pn.forward(params, cfg, cloud, program=prog)
+    per_layer = pn.forward(params, cfg, cloud,
+                           matmul=lambda a, w: reram_linear(a, w))
+    assert fused.shape == (10,)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(per_layer),
+                               rtol=1e-4, atol=1e-4)
+    # vmapped batched front-end over the fused pallas path
+    clouds = jnp.stack([cloud, cloud * 0.5])
+    batched = pn.batched_forward(params, cfg, clouds, program=prog)
+    assert batched.shape == (2, 10)
+    np.testing.assert_allclose(np.asarray(batched[0]), np.asarray(fused),
+                               rtol=1e-5, atol=1e-5)

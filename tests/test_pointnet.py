@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # deterministic sweep, see _hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import PAPER_MODELS
 from repro.core.workload import farthest_point_sample_np, knn_np

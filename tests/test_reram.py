@@ -1,7 +1,11 @@
 """ReRAM functional model: quantization + bit-slicing exactness."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # deterministic sweep, see _hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.reram import (bit_slice, crossbar_matmul, map_mlp_to_arrays,
                               quantize_weights)

@@ -1,7 +1,11 @@
 """Algorithm 1 (scheduling) properties — the paper's core contribution."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # deterministic sweep, see _hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (MODE_PRESETS, PAPER_MODELS, PointNetConfig,
                         PointNetWorkload, SALayerSpec, build_plan,
@@ -36,6 +40,44 @@ def test_morton_order_is_permutation(seed, n):
     pts = np.random.default_rng(seed).normal(size=(n, 3))
     order = morton_order(pts)
     assert sorted(order.tolist()) == list(range(n))
+
+
+def _greedy_nn_order_per_step(points, start=0):
+    """The pre-vectorization reference: recompute distances every step."""
+    n = points.shape[0]
+    remaining = np.ones(n, dtype=bool)
+    order = np.empty(n, dtype=np.int64)
+    cur = int(start)
+    for i in range(n):
+        order[i] = cur
+        remaining[cur] = False
+        if i == n - 1:
+            break
+        d = np.sum((points - points[cur]) ** 2, axis=1)
+        d[~remaining] = np.inf
+        cur = int(np.argmin(d))
+    return order
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 200))
+@settings(max_examples=25, deadline=None)
+def test_greedy_dense_matrix_matches_per_step(seed, n):
+    """The precomputed-distance-matrix fast path must give bit-identical
+    orders to the original per-step recompute (same rounding, same ties)."""
+    pts = np.random.default_rng(seed).normal(size=(n, 3))
+    assert np.array_equal(greedy_nn_order(pts), _greedy_nn_order_per_step(pts))
+    start = seed % n
+    assert np.array_equal(greedy_nn_order(pts, start=start),
+                          _greedy_nn_order_per_step(pts, start=start))
+
+
+def test_greedy_fallback_path_matches_dense(monkeypatch):
+    """Orders must not depend on which implementation path ran."""
+    from repro.core import schedule as sched
+    pts = np.random.default_rng(3).normal(size=(96, 3))
+    dense = greedy_nn_order(pts)
+    monkeypatch.setattr(sched, "GREEDY_DENSE_LIMIT", 0)
+    assert np.array_equal(sched.greedy_nn_order(pts), dense)
 
 
 def test_greedy_chain_is_locally_nearest(workload):
