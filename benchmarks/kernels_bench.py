@@ -16,8 +16,8 @@ import numpy as np
 
 from repro.core import PAPER_MODELS, PointNetWorkload, build_plan
 from repro.kernels import (aggregate_diff, build_program, count_dma_elisions,
-                           encode_planes, fps, reram_linear, reram_matmul_int,
-                           reram_mlp_fused)
+                           encode_planes, fps, plan_fused_mlp, reram_linear,
+                           reram_matmul_int, reram_mlp_fused)
 from .common import row
 
 
@@ -87,4 +87,33 @@ def kernels(iters=3):
         f"kernel/fused_mlp/512x{'-'.join(map(str, widths))}", us_f,
         f"sequential_us={us_s:.3f};speedup={us_s / max(us_f, 1e-9):.2f}x;"
         f"launches=1_vs_{len(mlp)}"))
+    # N/K-tiled fused MLP on model1's layer-2 geometry (d_pad=512): tiled
+    # (plane tiles staged through VMEM) vs whole-layer vs the sequential
+    # chain, all the same integer pipeline — the derived column records the
+    # per-grid-step VMEM residency each variant needs
+    widths2 = PAPER_MODELS["model1"].layers[1].mlp      # (256, 256, 256, 512)
+    mlp2 = [{"w": jnp.asarray(rng.normal(size=(k, n)), jnp.float32),
+             "b": jnp.asarray(rng.normal(size=(n,)), jnp.float32)}
+            for k, n in zip(widths2[:-1], widths2[1:])]
+    prog2 = build_program(mlp2)
+    x2 = jnp.asarray(rng.normal(size=(512, widths2[0])), jnp.float32)
+
+    def chain2(a):
+        for lyr in mlp2:
+            a = jnp.maximum(reram_linear(a, lyr["w"], lyr["b"]), 0.0)
+        return a
+
+    plan_t = plan_fused_mlp(prog2, x2.shape[0], block_n=128)
+    plan_w = plan_fused_mlp(prog2, x2.shape[0], block_n=prog2.d_pad)
+    us_t = _time(lambda a: reram_mlp_fused(a, prog2, block_n=128),
+                 x2, iters=iters)
+    us_w = _time(lambda a: reram_mlp_fused(a, prog2, block_n=prog2.d_pad),
+                 x2, iters=iters)
+    us_q = _time(chain2, x2, iters=iters)
+    rows.append(row(
+        f"kernel/fused_mlp_tiled/512x{'-'.join(map(str, widths2))}", us_t,
+        f"whole_us={us_w:.3f};sequential_us={us_q:.3f};"
+        f"vmem_tiled_mb={plan_t.vmem_bytes / 2**20:.2f};"
+        f"vmem_whole_mb={plan_w.vmem_bytes / 2**20:.2f};"
+        f"n_tiles={plan_t.n_steps}"))
     return rows

@@ -7,32 +7,58 @@ matmul -> bias+ReLU -> matmul) in ONE ``pallas_call``, with inter-layer
 activations living in a VMEM scratch buffer — 1 kernel launch instead of
 3, zero HBM round-trips between stages.
 
-Grid is ``(L, M/bm)`` with the layer index outermost and executed
-sequentially: layer ``l`` streams every activation stripe through layer
-``l``'s VMEM-resident planes (weight-stationary) before layer ``l+1``
-starts. A running max over layer ``l``'s masked outputs (SMEM scratch)
-finalizes into the *global per-tensor* activation scale right before
-layer ``l+1``'s first stripe — so intermediate re-quantization uses
-exactly the same scale the sequential ``reram_linear`` chain computes.
+Grid is ``(B, L, M/bm, N/bn)``, iterated with the batch element
+outermost and the N-tile innermost (row-major): batch element ``b`` runs
+its full L-layer pipeline before ``b+1`` starts, layer ``l`` streams
+every activation stripe and every N-tile through layer ``l``'s
+VMEM-staged plane tile (weight-stationary) before layer ``l+1`` starts.
+Only a ``(P, d, bn)`` plane tile is VMEM-resident per grid step — not
+the whole ``(P, d, d)`` layer — so programs whose padded layer exceeds
+the 16 MB VMEM budget (model2's d_pad=1024 layer 2) run tiled; a K-loop
+inside the kernel bounds each MXU op to ``(bm, bk) @ (bk, bn)``.
+``plan_fused_mlp`` (program.py) picks whole-layer (``bn = d``, the PR-1
+dataflow, a special case of this grid) vs tiled automatically from the
+per-grid-step VMEM residency.
+
+Two orderings make N-tiling exact:
+
+- *Input snapshot*: layer ``l`` both reads stripe ``i`` of the VMEM
+  activation panel (as its input) and writes it (as its output). With
+  ``bn < d`` the first N-tile's write would clobber columns later
+  N-tiles still need to read, so at ``j == 0`` the requantized input
+  stripe is snapshotted into an int32 VMEM scratch that all N-tiles of
+  ``(l, i)`` consume.
+- *Scale finalization*: the running max over layer ``l``'s masked
+  outputs (SMEM scratch) accumulates over every ``(i, j)`` tile and
+  finalizes into the *global per-tensor* activation scale at layer
+  ``l+1``'s first tile — max is order-free, so the scale equals the
+  whole-layer and sequential ``reram_linear`` values bitwise.
+
+The batch dimension lives in the grid, not in an outer vmap:
+``reram_mlp_fused_batched`` quantizes each batch element separately
+(per-element input scale, per-element SMEM running max — reset at each
+element's first tile) so one ``pallas_call`` reproduces the vmapped
+semantics of PR 1 exactly. ``reram_mlp_fused`` is the B=1 special case
+that flattens all leading axes into rows under one shared scale.
 
 Numerics contract (asserted in ``tests/test_fused_mlp.py``): the integer
 crossbar pipeline — quantize, plane shift-and-add, offset-binary
-correction, requantize — is *exact*, identical to the per-layer path.
-With zero biases the kernel matches the correctly-rounded NumPy oracle
-of the quantized chain BITWISE on arbitrary float inputs; with biases
-the dequant multiply-add may be FMA-contracted by XLA, so fused vs the
+correction, requantize — is *exact* and invariant to the N/K tiling
+(int32 accumulation is associative). With zero biases the kernel matches
+the correctly-rounded NumPy oracle of the quantized chain BITWISE on
+arbitrary float inputs at any tile edge; with biases the dequant
+multiply-add may be FMA-contracted by XLA, so fused vs the
 separately-compiled per-layer path agree to ~1 ulp (the per-layer path
 itself deviates from the NumPy oracle by the same margin) — at most 1
 quant LSB after requantization, and zero integer drift.
 
 All layers are padded to the program's uniform ``d_pad`` edge. Padded
 *columns* of the planes encode cell value 0 (which decodes to weight
--2^(b-1)), so their outputs are garbage — masked to zero before the max
-and before feeding the next layer, mirroring the per-layer path's slice
-to real shape. Padded *rows* (M) are likewise zero-masked. VMEM budget:
-``planes`` (L*P*d^2 int8) + ``act`` (M_pad*d f32) must fit on-chip on a
-real TPU; d <= 512 and M-striping keep the paper's models inside 16 MB,
-larger programs would need the N/K-tiled variant (ROADMAP open item).
+-2^(b-1)), so their outputs are garbage — ``col_mask`` is sliced at tile
+granularity ``(l, j)`` and zeroes them per N-tile (ragged real widths
+land mid-tile) before the max and before feeding the next layer,
+mirroring the per-layer path's slice to real shape. Padded *rows* (M)
+are likewise zero-masked.
 """
 from __future__ import annotations
 
@@ -43,25 +69,27 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .program import CrossbarProgram, quantize_tensor
+from .program import CrossbarProgram, plan_fused_mlp, quantize_tensor
 
-__all__ = ["reram_mlp_fused"]
+__all__ = ["reram_mlp_fused", "reram_mlp_fused_batched"]
 
 DEFAULT_BLOCK_M = 128   # activation stripe height (crossbar geometry)
 
 
 def _kernel(x0_ref, planes_ref, bias_ref, sw_ref, sx0_ref, mask_ref,
-            o_ref, act_ref, s_ref, mx_ref, *,
+            o_ref, act_ref, xq_ref, xs_ref, s_ref, mx_ref, *,
             n_layers: int, n_planes: int, cell_bits: int, weight_bits: int,
-            block_m: int, m_real: int, final_relu: bool):
-    l = pl.program_id(0)            # layer (outermost, sequential)
-    i = pl.program_id(1)            # activation stripe
+            block_m: int, block_k: int, m_real: int, final_relu: bool):
+    l = pl.program_id(1)            # layer (sequential, after batch)
+    i = pl.program_id(2)            # activation stripe
+    j = pl.program_id(3)            # output N-tile (innermost)
     qmax = float(2 ** (weight_bits - 1) - 1)
 
-    @pl.when(i == 0)
+    @pl.when(jnp.logical_and(i == 0, j == 0))
     def _start_layer():
-        # finalize this layer's global input scale: the external quant scale
-        # for layer 0, else max|prev layer output| / qmax (quantize_tensor)
+        # finalize this layer's global input scale: this batch element's
+        # external quant scale for layer 0, else max|prev layer output| /
+        # qmax (quantize_tensor semantics)
         s_ref[0] = jnp.where(
             l == 0, sx0_ref[0, 0],
             jnp.maximum(mx_ref[0] / qmax, 1e-12))
@@ -69,25 +97,41 @@ def _kernel(x0_ref, planes_ref, bias_ref, sw_ref, sx0_ref, mask_ref,
 
     s = s_ref[0]
     rows = pl.ds(i * block_m, block_m)
-    # layer input stripe: pre-quantized ints for layer 0, else re-quantize
-    # the VMEM-resident float activations written by layer l-1
-    x_q = jnp.clip(jnp.round(act_ref[rows, :] / s), -qmax, qmax
-                   ).astype(jnp.int32)
-    x_int = jnp.where(l == 0, x0_ref[...].astype(jnp.int32), x_q)
 
-    # bit-sliced crossbar matmul: shift-and-add over the 2-bit cell planes
-    acc = jnp.zeros(o_ref.shape, jnp.int32)
+    @pl.when(j == 0)
+    def _snapshot_input():
+        # requantize this stripe's input ONCE per (l, i): later N-tiles must
+        # not re-read act rows whose low columns tile j=0 already overwrote
+        # with this layer's outputs. Layer 0 takes the pre-quantized ints.
+        # The offset-correction row sums only depend on (l, i) too, so they
+        # are reduced here once instead of per N-tile.
+        x_q = jnp.clip(jnp.round(act_ref[rows, :] / s), -qmax, qmax
+                       ).astype(jnp.int32)
+        x_new = jnp.where(l == 0, x0_ref[0].astype(jnp.int32), x_q)
+        xq_ref[...] = x_new
+        xs_ref[...] = jnp.sum(x_new, axis=1, keepdims=True)
+
+    x_int = xq_ref[...]
+    d = x_int.shape[-1]
+    bn = planes_ref.shape[-1]
+
+    # bit-sliced crossbar matmul: shift-and-add over the 2-bit cell planes,
+    # K-loop bounding each MXU op to (block_m, block_k) @ (block_k, bn)
+    acc = jnp.zeros((block_m, bn), jnp.int32)
     for p in range(n_planes):
-        w = planes_ref[0, p].astype(jnp.int32)
-        part = jax.lax.dot_general(x_int, w, (((1,), (0,)), ((), ())),
-                                   preferred_element_type=jnp.int32)
+        part = jnp.zeros((block_m, bn), jnp.int32)
+        for k0 in range(0, d, block_k):
+            w = planes_ref[0, p, k0:k0 + block_k, :].astype(jnp.int32)
+            part = part + jax.lax.dot_general(
+                x_int[:, k0:k0 + block_k], w, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
         acc = acc + (part << (cell_bits * p))
-    xsum = jnp.sum(x_int, axis=1, keepdims=True)
-    y_int = acc - (xsum << (weight_bits - 1))   # offset-binary correction
+    y_int = acc - (xs_ref[...] << (weight_bits - 1))   # offset-binary corr.
 
     # dequantize + bias + ReLU (the inter-layer stage that used to round-trip
     # through HBM), then zero the padded rows/columns exactly as the
-    # sequential path's slice-to-real-shape does
+    # sequential path's slice-to-real-shape does — col_mask at tile
+    # granularity handles real widths that end mid-tile
     y = y_int.astype(jnp.float32) * (s * sw_ref[0, 0]) + bias_ref[...]
     do_relu = jnp.logical_or(l < n_layers - 1, final_relu)
     y = jnp.where(do_relu, jnp.maximum(y, 0.0), y)
@@ -97,29 +141,81 @@ def _kernel(x0_ref, planes_ref, bias_ref, sw_ref, sx0_ref, mask_ref,
     y = jnp.where(row_ids < m_real, y, 0.0)
 
     mx_ref[0] = jnp.maximum(mx_ref[0], jnp.max(jnp.abs(y)))
-    act_ref[rows, :] = y                        # stays in VMEM for layer l+1
+    act_ref[rows, pl.ds(j * bn, bn)] = y        # stays in VMEM for layer l+1
 
     @pl.when(l == n_layers - 1)                 # only the last layer's
-    def _store():                               # stripes reach the output
-        o_ref[...] = y
+    def _store():                               # tiles reach the output
+        o_ref[0] = y
 
 
-@functools.partial(jax.jit, static_argnames=("final_relu", "block_m",
-                                             "interpret"))
-def reram_mlp_fused(x: jnp.ndarray, program: CrossbarProgram, *,
-                    final_relu: bool = True,
-                    block_m: int = DEFAULT_BLOCK_M,
-                    interpret: bool = True) -> jnp.ndarray:
-    """Float ``(…, d0)`` through the whole programmed MLP -> ``(…, dL)``,
-    in a single ``pallas_call``. Same quantization scales and exact same
-    integer arithmetic as chaining ``reram_linear`` + bias + ReLU per layer
-    (float dequant agrees to FMA-contraction ulps — see module docstring),
-    with zero weight encoding in the hot path."""
+def _launch(x_p, sx, program: CrossbarProgram, *, m_real: int,
+            final_relu: bool, block_m: int, block_n: int, block_k: int,
+            interpret: bool):
+    """One ``pallas_call`` over pre-quantized ``(B, m_pad, d)`` int8 rows
+    with per-batch-element scales ``sx`` of shape ``(B, 1)``."""
+    b, m_pad, d = x_p.shape
+    m_steps = m_pad // block_m
+    n_steps = d // block_n
+    n_layers, n_planes = program.n_layers, program.n_planes
+
+    kernel = functools.partial(
+        _kernel, n_layers=n_layers, n_planes=n_planes,
+        cell_bits=program.cell_bits, weight_bits=program.weight_bits,
+        block_m=block_m, block_k=block_k, m_real=m_real,
+        final_relu=final_relu)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, n_layers, m_steps, n_steps),
+        in_specs=[
+            pl.BlockSpec((1, block_m, d), lambda bb, l, i, j: (bb, i, 0)),
+            pl.BlockSpec((1, n_planes, d, block_n),
+                         lambda bb, l, i, j: (l, 0, 0, j)),
+            pl.BlockSpec((1, block_n), lambda bb, l, i, j: (l, j)),
+            pl.BlockSpec((1, 1), lambda bb, l, i, j: (l, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda bb, l, i, j: (bb, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, block_n), lambda bb, l, i, j: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, block_n),
+                               lambda bb, l, i, j: (bb, i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, m_pad, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((m_pad, d), jnp.float32),   # inter-layer activations
+            pltpu.VMEM((block_m, d), jnp.int32),   # input-stripe snapshot
+            pltpu.VMEM((block_m, 1), jnp.int32),   # stripe row sums (offset)
+            pltpu.SMEM((1,), jnp.float32),         # current layer act scale
+            pltpu.SMEM((1,), jnp.float32),         # running max|output|
+        ],
+        interpret=interpret,
+    )(x_p, program.planes, program.bias, program.w_scale, sx,
+      program.col_mask)
+
+
+def _check_bits(program: CrossbarProgram):
     if program.weight_bits > 8:
         raise ValueError(
             f"reram_mlp_fused streams int8 activations (the 128x128 INT8 "
             f"crossbar geometry); weight_bits={program.weight_bits} > 8 "
             f"would overflow them")
+
+
+@functools.partial(jax.jit, static_argnames=("final_relu", "block_m",
+                                             "block_n", "block_k",
+                                             "interpret"))
+def reram_mlp_fused(x: jnp.ndarray, program: CrossbarProgram, *,
+                    final_relu: bool = True,
+                    block_m: int = DEFAULT_BLOCK_M,
+                    block_n: int | None = None,
+                    block_k: int | None = None,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Float ``(…, d0)`` through the whole programmed MLP -> ``(…, dL)``,
+    in a single ``pallas_call``. Same quantization scales and exact same
+    integer arithmetic as chaining ``reram_linear`` + bias + ReLU per layer
+    (float dequant agrees to FMA-contraction ulps — see module docstring),
+    with zero weight encoding in the hot path. ``block_n``/``block_k``
+    default to ``plan_fused_mlp``'s VMEM-budget auto-selection."""
+    _check_bits(program)
     widths = program.widths
     d = program.d_pad
     lead = x.shape[:-1]
@@ -127,37 +223,48 @@ def reram_mlp_fused(x: jnp.ndarray, program: CrossbarProgram, *,
     m0 = x2.shape[0]
     x_int, sx = quantize_tensor(x2, bits=program.weight_bits)
 
-    m_pad = -(-max(m0, 1) // block_m) * block_m
-    x_p = jnp.zeros((m_pad, d), jnp.int8).at[:m0, :widths[0]].set(
+    plan = plan_fused_mlp(program, m0, block_m=block_m, block_n=block_n,
+                          block_k=block_k)
+    x_p = jnp.zeros((1, plan.m_pad, d), jnp.int8).at[0, :m0, :widths[0]].set(
         x_int.astype(jnp.int8))
-    m_steps = m_pad // block_m
-    n_layers, n_planes = program.n_layers, program.n_planes
+    out = _launch(x_p, sx.reshape(1, 1).astype(jnp.float32), program,
+                  m_real=m0, final_relu=final_relu, block_m=plan.block_m,
+                  block_n=plan.block_n, block_k=plan.block_k,
+                  interpret=interpret)
+    return out[0, :m0, :widths[-1]].reshape(*lead, widths[-1])
 
-    kernel = functools.partial(
-        _kernel, n_layers=n_layers, n_planes=n_planes,
-        cell_bits=program.cell_bits, weight_bits=program.weight_bits,
-        block_m=block_m, m_real=m0, final_relu=final_relu)
-    out = pl.pallas_call(
-        kernel,
-        grid=(n_layers, m_steps),
-        in_specs=[
-            pl.BlockSpec((block_m, d), lambda l, i: (i, 0)),
-            pl.BlockSpec((1, n_planes, d, d), lambda l, i: (l, 0, 0, 0)),
-            pl.BlockSpec((1, d), lambda l, i: (l, 0)),
-            pl.BlockSpec((1, 1), lambda l, i: (l, 0),
-                         memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, 1), lambda l, i: (0, 0),
-                         memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, d), lambda l, i: (l, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_m, d), lambda l, i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((m_pad, d), jnp.float32),
-        scratch_shapes=[
-            pltpu.VMEM((m_pad, d), jnp.float32),   # inter-layer activations
-            pltpu.SMEM((1,), jnp.float32),         # current layer act scale
-            pltpu.SMEM((1,), jnp.float32),         # running max|output|
-        ],
-        interpret=interpret,
-    )(x_p, program.planes, program.bias, program.w_scale,
-      sx.reshape(1, 1).astype(jnp.float32), program.col_mask)
-    return out[:m0, :widths[-1]].reshape(*lead, widths[-1])
+
+@functools.partial(jax.jit, static_argnames=("final_relu", "block_m",
+                                             "block_n", "block_k",
+                                             "interpret"))
+def reram_mlp_fused_batched(x: jnp.ndarray, program: CrossbarProgram, *,
+                            final_relu: bool = True,
+                            block_m: int = DEFAULT_BLOCK_M,
+                            block_n: int | None = None,
+                            block_k: int | None = None,
+                            interpret: bool = True) -> jnp.ndarray:
+    """Float ``(B, …, d0)`` -> ``(B, …, dL)`` with the batch folded into
+    the kernel grid: ONE ``pallas_call`` for the whole batch, no outer
+    vmap. Each batch element keeps its own input quantization scale and
+    its own inter-layer running-max scales (reset at its first grid
+    step), so the result matches ``vmap(reram_mlp_fused)`` — bitwise on
+    the integer pipeline, ~1 ulp on the float dequant."""
+    _check_bits(program)
+    widths = program.widths
+    d = program.d_pad
+    batch = x.shape[0]
+    lead = x.shape[1:-1]
+    x2 = x.reshape(batch, -1, widths[0])
+    m0 = x2.shape[1]
+    x_int, sx = jax.vmap(
+        lambda xb: quantize_tensor(xb, bits=program.weight_bits))(x2)
+
+    plan = plan_fused_mlp(program, m0, block_m=block_m, block_n=block_n,
+                          block_k=block_k)
+    x_p = jnp.zeros((batch, plan.m_pad, d), jnp.int8
+                    ).at[:, :m0, :widths[0]].set(x_int.astype(jnp.int8))
+    out = _launch(x_p, sx.reshape(batch, 1).astype(jnp.float32), program,
+                  m_real=m0, final_relu=final_relu, block_m=plan.block_m,
+                  block_n=plan.block_n, block_k=plan.block_k,
+                  interpret=interpret)
+    return out[:, :m0, :widths[-1]].reshape(batch, *lead, widths[-1])

@@ -24,11 +24,15 @@ import jax.numpy as jnp
 from .ref import combine_planes
 
 __all__ = [
-    "CrossbarProgram", "build_program", "quantize_tensor", "encode_planes",
+    "CrossbarProgram", "FusedPlan", "build_program", "encode_planes",
+    "fused_vmem_bytes", "plan_fused_mlp", "quantize_tensor",
 ]
 
 #: Crossbar / MXU tile edge — every program dimension is padded to this.
 CROSSBAR = 128
+
+#: Per-core VMEM the fused kernel is budgeted against (TPU: ~16 MB/core).
+VMEM_BUDGET_BYTES = 16 * 2 ** 20
 
 
 def quantize_tensor(x: jnp.ndarray, bits: int = 8):
@@ -161,3 +165,108 @@ def build_program(layers: Sequence, *, weight_bits: int = 8,
         weight_bits=weight_bits,
         cell_bits=cell_bits,
     )
+
+
+# ---------------------------------------------------------------------------
+# VMEM-cost accounting for the fused kernel (DESIGN.md §3.3)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FusedPlan:
+    """Static launch geometry for ``reram_mlp_fused`` plus its per-grid-step
+    VMEM residency under the double-buffered pipelining model. ``tiled``
+    means the N dimension is split (``block_n < d_pad``); ``whole_bytes``
+    records what the whole-layer variant would have cost, so the selection
+    is auditable. ``fits_budget`` is False only when even the smallest tile
+    edge cannot fit (the irreducible activation panel dominates)."""
+
+    d_pad: int
+    m_pad: int
+    block_m: int
+    block_n: int
+    block_k: int
+    vmem_bytes: int
+    whole_bytes: int
+    budget: int = VMEM_BUDGET_BYTES
+
+    @property
+    def tiled(self) -> bool:
+        return self.block_n < self.d_pad
+
+    @property
+    def fits_budget(self) -> bool:
+        return self.vmem_bytes <= self.budget
+
+    @property
+    def n_steps(self) -> int:
+        return self.d_pad // self.block_n
+
+
+def fused_vmem_bytes(d_pad: int, n_planes: int, m_pad: int,
+                     block_m: int, block_n: int) -> int:
+    """Per-grid-step VMEM residency of the fused kernel at tile edge
+    ``block_n``. Pipelined operand/result blocks are double-buffered (×2,
+    the TPU prefetch-while-compute discipline); scratch buffers are
+    persistent single instances. ``block_k`` does not appear: the K-loop
+    runs over the already-resident ``(P, d_pad, block_n)`` plane tile and
+    only bounds the MXU op footprint, not residency."""
+    blocks = (
+        n_planes * d_pad * block_n      # int8 plane tile
+        + block_m * d_pad               # int8 input stripe (layer 0)
+        + 4 * block_m * block_n         # f32 output tile
+        + 2 * 4 * block_n               # f32 bias + col-mask tiles
+    )
+    scratch = (
+        4 * m_pad * d_pad               # f32 inter-layer activation panel
+        + 4 * block_m * d_pad           # int32 requantized-stripe snapshot
+        + 4 * block_m                   # int32 stripe row sums
+    )
+    return 2 * blocks + scratch
+
+
+def plan_fused_mlp(program: "CrossbarProgram", m_rows: int, *,
+                   block_m: int = CROSSBAR, block_n: int | None = None,
+                   block_k: int | None = None,
+                   vmem_budget: int = VMEM_BUDGET_BYTES) -> FusedPlan:
+    """Pick the fused-kernel launch geometry for ``m_rows`` activation rows:
+    whole-layer (``block_n = d_pad``, the PR-1 dataflow) when its residency
+    fits ``vmem_budget``, else the largest 128-multiple tile edge that
+    divides ``d_pad`` and fits. Pass ``block_n``/``block_k`` to pin either
+    explicitly (still validated against the crossbar geometry). Pure static
+    arithmetic — safe to call at trace time."""
+    d = program.d_pad
+    p = program.n_planes
+    if block_m % 8 != 0 or block_m <= 0:
+        raise ValueError(f"block_m={block_m} must be a positive multiple "
+                         f"of 8 (f32 sublane tiling)")
+    m_pad = -(-max(m_rows, 1) // block_m) * block_m
+    whole = fused_vmem_bytes(d, p, m_pad, block_m, d)
+
+    if block_n is None:
+        bn = d
+        if whole > vmem_budget:
+            # largest 128-multiple divisor of d_pad that fits the budget;
+            # fall through to the minimum edge if nothing fits (the act
+            # panel is irreducible at this block_m).
+            bn = CROSSBAR
+            for cand in range(d - CROSSBAR, 0, -CROSSBAR):
+                if d % cand == 0 and fused_vmem_bytes(
+                        d, p, m_pad, block_m, cand) <= vmem_budget:
+                    bn = cand
+                    break
+    else:
+        bn = block_n
+        if bn <= 0 or bn % CROSSBAR != 0 or d % bn != 0:
+            raise ValueError(f"block_n={bn} must be a multiple of "
+                             f"{CROSSBAR} dividing d_pad={d}")
+    if block_k is None:
+        bk = min(d, 4 * CROSSBAR)
+    else:
+        bk = block_k
+        if bk <= 0 or bk % CROSSBAR != 0 or d % bk != 0:
+            raise ValueError(f"block_k={bk} must be a multiple of "
+                             f"{CROSSBAR} dividing d_pad={d}")
+    return FusedPlan(
+        d_pad=d, m_pad=m_pad, block_m=block_m, block_n=bn, block_k=bk,
+        vmem_bytes=fused_vmem_bytes(d, p, m_pad, block_m, bn),
+        whole_bytes=whole, budget=vmem_budget)

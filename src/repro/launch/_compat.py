@@ -1,0 +1,35 @@
+"""Version-compat shims for ``jax.lax`` collectives.
+
+The repo's compat floor is JAX 0.4.37 (see requirements.txt). Two lax
+APIs used by the launch layer arrived later:
+
+- ``lax.axis_size(name)`` (JAX >= 0.5): on older JAX the canonical idiom
+  is ``lax.psum(1, name)``, which constant-folds to a Python ``int`` at
+  trace time inside shard_map — so call sites can keep building static
+  permutation lists from it.
+- ``lax.pvary(x, names)`` (JAX >= 0.6 varying-manual-axes checking): a
+  no-op on older JAX, which has no per-axis replication typing to
+  satisfy; values are simply device-varying or not at runtime.
+
+Both shims defer to the real ``lax`` attribute when it exists, so newer
+JAX keeps its stricter semantics.
+"""
+from __future__ import annotations
+
+from jax import lax
+
+__all__ = ["axis_size", "pvary"]
+
+
+def axis_size(axis_name) -> int:
+    """Size of a mapped axis; static-int fallback for JAX < 0.5."""
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)
+
+
+def pvary(x, axis_names):
+    """Mark ``x`` device-varying over ``axis_names``; no-op pre-0.6."""
+    if hasattr(lax, "pvary"):
+        return lax.pvary(x, axis_names)
+    return x

@@ -26,7 +26,10 @@ The MLP supports three backends:
                   once at program time (mirroring crossbar programming);
                   each SA-layer MLP and the head run as ONE fused
                   ``pallas_call`` with inter-layer activations in VMEM
-                  (``repro.kernels.fused_mlp``).
+                  (``repro.kernels.fused_mlp``). Under ``batched_forward``
+                  the batch dimension is folded into the kernel grid
+                  (``reram_mlp_fused_batched``) — one launch per MLP for
+                  the whole batch, no vmap over the kernel.
 
 Both ReRAM backends are numerically the quantized network (paper's
 no-accuracy-variation property); the fused path shares the per-layer
@@ -42,7 +45,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.workload import PointNetConfig, SALayerSpec
-from repro.kernels import build_program, reram_mlp_fused
+from repro.kernels import (build_program, reram_mlp_fused,
+                           reram_mlp_fused_batched)
 
 Params = Any
 
@@ -139,18 +143,25 @@ def lift_features(points: jnp.ndarray, n_features: int) -> jnp.ndarray:
     return f[:, :n_features]
 
 
+def _sa_geometry(spec: SALayerSpec, points, features):
+    """The point-mapping + aggregation half of one SA layer on a single
+    cloud: FPS centers, k-NN gather, neighbor-minus-center differences.
+    points (N, 3), features (N, C_in) -> (M, 3), (M, K, C_in)."""
+    centers = farthest_point_sample(points, spec.n_centers)
+    c_pts = points[centers]
+    nbr = knn(c_pts, points, spec.n_neighbors)          # (M, K)
+    f_nbr = features[nbr]                               # (M, K, C)
+    f_ctr = features[centers][:, None, :]
+    return c_pts, f_nbr - f_ctr                         # aggregation D(.)
+
+
 def sa_layer(mlp_params, spec: SALayerSpec, points, features, *,
              matmul=None, program=None):
     """One set-abstraction layer on a single cloud.
     points (N, 3), features (N, C_in) -> (M, 3), (M, C_out).
     With ``program`` set, the 3-stage MLP runs as a single fused
     ``pallas_call`` over the pre-encoded weight-stationary planes."""
-    centers = farthest_point_sample(points, spec.n_centers)
-    c_pts = points[centers]
-    nbr = knn(c_pts, points, spec.n_neighbors)          # (M, K)
-    f_nbr = features[nbr]                               # (M, K, C)
-    f_ctr = features[centers][:, None, :]
-    diff = f_nbr - f_ctr                                # aggregation D(.)
+    c_pts, diff = _sa_geometry(spec, points, features)
     if program is not None:
         h = reram_mlp_fused(diff, program)              # feature comp. M(.)
     else:
@@ -180,8 +191,27 @@ def forward(params: Params, config: PointNetConfig, cloud: jnp.ndarray, *,
 
 
 def batched_forward(params, config, clouds, *, matmul=None, program=None):
-    return jax.vmap(lambda c: forward(params, config, c, matmul=matmul,
-                                      program=program))(clouds)
+    """Batch of clouds (B, N, 3) -> logits (B, n_classes).
+
+    Backend selection: the float and 'reram' (per-layer) backends vmap the
+    single-cloud forward. The 'reram-fused' backend (``program`` set) does
+    NOT vmap the kernel — only the per-cloud geometry is vmapped, and every
+    MLP runs as ONE batch-in-grid ``pallas_call``
+    (``reram_mlp_fused_batched``), each cloud keeping its own quantization
+    scales exactly as the vmapped path computed them."""
+    if program is None:
+        return jax.vmap(lambda c: forward(params, config, c,
+                                          matmul=matmul))(clouds)
+    feats = jax.vmap(
+        lambda c: lift_features(c, config.layers[0].in_features))(clouds)
+    pts = clouds
+    for i, spec in enumerate(config.layers):
+        pts, diff = jax.vmap(
+            functools.partial(_sa_geometry, spec))(pts, feats)
+        h = reram_mlp_fused_batched(diff, program["sa"][i])
+        feats = jnp.max(h, axis=2)                      # reduction over K
+    g = jnp.max(feats, axis=1)                          # global max pool
+    return reram_mlp_fused_batched(g, program["head"], final_relu=False)
 
 
 def loss_fn(params, config, clouds, labels, *, matmul=None, program=None):

@@ -17,8 +17,10 @@ try:
 except ImportError:      # deterministic sweep, see _hypothesis_fallback.py
     from _hypothesis_fallback import given, settings, st
 
-from repro.kernels import (CrossbarProgram, build_program, quantize_tensor,
-                           reram_linear, reram_mlp_fused)
+from repro.kernels import (CrossbarProgram, build_program, plan_fused_mlp,
+                           quantize_tensor, reram_linear, reram_mlp_fused,
+                           reram_mlp_fused_batched)
+from repro.kernels.program import VMEM_BUDGET_BYTES, fused_vmem_bytes
 from repro.kernels.ref import combine_planes
 
 RNG = np.random.default_rng(0)
@@ -183,6 +185,129 @@ def test_leading_dims_like_sa_layer():
 
 
 # ---------------------------------------------------------------------------
+# N/K tiling: tiled vs whole-layer bitwise, VMEM budget, ragged widths
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("widths,m,zero_bias", [
+    ((130, 200, 70), 257, False),    # every real width ends mid-tile
+    ((4, 64, 64, 128), 300, False),  # d_pad == tile edge (single N-tile)
+    ((17, 300, 140), 65, True),
+])
+def test_tiled_matches_whole_layer_bitwise(widths, m, zero_bias):
+    """The N/K tiling must be invisible: int32 accumulation is associative
+    and every float op runs elementwise on identical values, so tiled and
+    whole-layer outputs are bitwise equal — including with biases, and
+    including real widths not divisible by the tile edge (the per-tile
+    col_mask regression)."""
+    rng = np.random.default_rng(21)
+    layers = _mk_layers(widths, rng, zero_bias=zero_bias)
+    prog = build_program(layers)
+    x = jnp.asarray(rng.normal(size=(m, widths[0])), jnp.float32)
+    whole = reram_mlp_fused(x, prog, block_n=prog.d_pad)
+    tiled = reram_mlp_fused(x, prog, block_n=128, block_k=128)
+    assert bool(jnp.all(whole == tiled))
+    seq = np.asarray(_sequential(layers, x))
+    np.testing.assert_allclose(np.asarray(tiled), seq, rtol=1e-5,
+                               atol=1e-5 * max(1.0, np.abs(seq).max()))
+
+
+def test_model2_layer2_d1024_tiled_within_budget():
+    """The acceptance geometry: model2's layer-2 MLP (512, 512, 512, 1024)
+    at its real row count (128 centers x 16 neighbors = 2048). The
+    whole-layer dataflow busts the 16 MB VMEM budget, the auto-selector
+    picks an N-tiled plan that fits, and the tiled kernel matches the
+    sequential ``reram_linear`` chain BITWISE on the zero-bias integer
+    pipeline."""
+    widths, m = (512, 512, 512, 1024), 2048
+    rng = np.random.default_rng(22)
+    layers = _mk_layers(widths, rng, zero_bias=True)
+    prog = build_program(layers)
+    assert prog.d_pad == 1024
+
+    plan = plan_fused_mlp(prog, m)
+    assert plan.whole_bytes > VMEM_BUDGET_BYTES      # whole layer: too big
+    assert plan.tiled and plan.d_pad % plan.block_n == 0
+    assert plan.vmem_bytes <= VMEM_BUDGET_BYTES      # per-layer-tile: fits
+    assert plan.fits_budget
+
+    x = jnp.asarray(rng.normal(size=(m, widths[0])), jnp.float32)
+    fused = reram_mlp_fused(x, prog, final_relu=False)   # auto plan = tiled
+    seq = _sequential(layers, x, final_relu=False)
+    assert np.array_equal(np.asarray(fused), np.asarray(seq))
+
+
+def test_plan_auto_selects_whole_layer_below_budget():
+    layers = _mk_layers((4, 64, 64, 128), np.random.default_rng(23))
+    prog = build_program(layers)
+    plan = plan_fused_mlp(prog, 512)
+    assert not plan.tiled and plan.block_n == prog.d_pad == 128
+    assert plan.vmem_bytes == plan.whole_bytes <= VMEM_BUDGET_BYTES
+
+
+def test_plan_auto_selects_tiled_above_budget():
+    """Shrinking the budget below the whole-layer residency must flip the
+    selector to the largest fitting 128-multiple divisor of d_pad."""
+    layers = _mk_layers((512, 512, 1024), np.random.default_rng(24),
+                        zero_bias=True)
+    prog = build_program(layers)
+    whole = fused_vmem_bytes(1024, prog.n_planes, 1024, 128, 1024)
+    plan = plan_fused_mlp(prog, 1024, vmem_budget=whole - 1)
+    assert plan.tiled and plan.block_n < 1024
+    assert 1024 % plan.block_n == 0 and plan.block_n % 128 == 0
+    assert plan.vmem_bytes <= whole - 1
+    # explicit block sizes are validated against the crossbar geometry
+    with pytest.raises(ValueError):
+        plan_fused_mlp(prog, 64, block_n=96)
+    with pytest.raises(ValueError):
+        plan_fused_mlp(prog, 64, block_n=768)    # does not divide 1024
+    with pytest.raises(ValueError):
+        plan_fused_mlp(prog, 64, block_k=48)
+
+
+# ---------------------------------------------------------------------------
+# batch-in-grid: one pallas_call for the whole batch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("widths,b,m,zero_bias", [
+    ((17, 100, 2), 4, 50, True),     # zero bias: bitwise vs vmapped
+    ((130, 200, 70), 3, 33, False),  # tiled + biases: ~1 ulp
+    ((8, 32, 16), 2, 1, False),      # single-row elements (the head shape)
+])
+def test_batched_matches_vmapped(widths, b, m, zero_bias):
+    """Folding the batch into the grid must reproduce the PR-1 vmapped
+    path: per-batch-element input scales and running-max requant scales.
+    Zero-bias is bitwise; with biases the two compilations agree to ~1
+    ulp (FMA contraction)."""
+    rng = np.random.default_rng(31)
+    layers = _mk_layers(widths, rng, zero_bias=zero_bias)
+    prog = build_program(layers)
+    # distinct per-element magnitudes so shared-scale bugs cannot hide
+    x = jnp.asarray(rng.normal(size=(b, m, widths[0]))
+                    * (10.0 ** np.arange(b))[:, None, None], jnp.float32)
+    bat = reram_mlp_fused_batched(x, prog, block_n=128)
+    vm = jax.vmap(lambda c: reram_mlp_fused(c, prog, block_n=128))(x)
+    assert bat.shape == vm.shape == (b, m, widths[-1])
+    if zero_bias:
+        assert bool(jnp.all(bat == vm))
+    else:
+        np.testing.assert_allclose(np.asarray(bat), np.asarray(vm),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_batched_leading_dims_match_vmapped():
+    """(B, M, K, C) aggregation layout — per-element leading dims flatten
+    to rows exactly like the unbatched kernel."""
+    rng = np.random.default_rng(32)
+    prog = build_program(_mk_layers((8, 32, 16), rng))
+    x = jnp.asarray(rng.normal(size=(3, 13, 16, 8)), jnp.float32)
+    bat = reram_mlp_fused_batched(x, prog)
+    vm = jax.vmap(lambda c: reram_mlp_fused(c, prog))(x)
+    assert bat.shape == (3, 13, 16, 16)
+    np.testing.assert_allclose(np.asarray(bat), np.asarray(vm),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # CrossbarProgram: build-once semantics + round trip
 # ---------------------------------------------------------------------------
 
@@ -261,9 +386,44 @@ def test_pointnet_fused_backend_matches_per_layer():
     assert fused.shape == (10,)
     np.testing.assert_allclose(np.asarray(fused), np.asarray(per_layer),
                                rtol=1e-4, atol=1e-4)
-    # vmapped batched front-end over the fused pallas path
+    # batch-in-grid front-end over the fused pallas path: matches both the
+    # single-cloud fused forward and the PR-1 style vmapped-forward path
     clouds = jnp.stack([cloud, cloud * 0.5])
     batched = pn.batched_forward(params, cfg, clouds, program=prog)
     assert batched.shape == (2, 10)
     np.testing.assert_allclose(np.asarray(batched[0]), np.asarray(fused),
                                rtol=1e-5, atol=1e-5)
+    vmapped = jax.vmap(
+        lambda c: pn.forward(params, cfg, c, program=prog))(clouds)
+    np.testing.assert_allclose(np.asarray(batched), np.asarray(vmapped),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pointnet_batched_backend_no_outer_vmap(monkeypatch):
+    """``batched_forward(program=...)`` must dispatch every MLP through the
+    batch-in-grid kernel — one ``pallas_call`` per MLP for the whole batch
+    — and never route the batch through the unbatched kernel under vmap."""
+    from repro.core.workload import PointNetConfig, SALayerSpec
+    from repro.models import pointnet2 as pn
+    cfg = PointNetConfig(name="tiny", n_points=32, layers=(
+        SALayerSpec(n_centers=12, n_neighbors=4, in_features=4,
+                    mlp=(4, 8, 8, 16)),
+        SALayerSpec(n_centers=4, n_neighbors=4, in_features=16,
+                    mlp=(16, 16, 16, 32)),
+    ))
+    params = pn.init_params(jax.random.PRNGKey(1), cfg, n_classes=5)
+    prog = pn.build_model_program(params)
+    clouds = jnp.asarray(np.random.default_rng(13).normal(size=(3, 32, 3)),
+                         jnp.float32)
+    calls = []
+    real = pn.reram_mlp_fused_batched
+    monkeypatch.setattr(pn, "reram_mlp_fused_batched",
+                        lambda *a, **k: calls.append(a[0].shape) or
+                        real(*a, **k))
+    monkeypatch.setattr(pn, "reram_mlp_fused", lambda *a, **k: pytest.fail(
+        "batched_forward(program=...) vmapped the unbatched kernel"))
+    out = pn.batched_forward(params, cfg, clouds, program=prog)
+    assert out.shape == (3, 5)
+    # one batched launch per MLP (2 SA layers + head), batch axis intact
+    assert len(calls) == 3
+    assert all(shape[0] == 3 for shape in calls)
