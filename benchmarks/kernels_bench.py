@@ -9,12 +9,15 @@ aggregation kernel under paper-vs-index orderings (the locality win).
 from __future__ import annotations
 
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compile_model
 from repro.core import PAPER_MODELS, PointNetWorkload, build_plan
+from repro.core.workload import PointNetConfig, SALayerSpec
 from repro.kernels import (aggregate_diff, build_program, count_dma_elisions,
                            encode_planes, fps, plan_fused_mlp, reram_linear,
                            reram_matmul_int, reram_mlp_fused)
@@ -116,4 +119,30 @@ def kernels(iters=3):
         f"vmem_tiled_mb={plan_t.vmem_bytes / 2**20:.2f};"
         f"vmem_whole_mb={plan_w.vmem_bytes / 2**20:.2f};"
         f"n_tiles={plan_t.n_steps}"))
+    # compile_model dispatch overhead: CompiledModel.batched_forward vs the
+    # pre-redesign call path (pointnet2.batched_forward(program=...)), both
+    # under jit — the registry traces to the identical computation, so the
+    # ratio must be ~1.0 (dispatch is free once compiled)
+    from repro.models import pointnet2 as pn
+    cfg_t = PointNetConfig(name="bench-tiny", n_points=64, layers=(
+        SALayerSpec(n_centers=24, n_neighbors=4, in_features=4,
+                    mlp=(4, 8, 8, 16)),
+        SALayerSpec(n_centers=8, n_neighbors=4, in_features=16,
+                    mlp=(16, 16, 16, 32)),
+    ))
+    params = pn.init_params(jax.random.PRNGKey(0), cfg_t, n_classes=10)
+    prog = pn.build_model_program(params)
+    model = compile_model(params, cfg_t, backend="reram-fused", program=prog)
+    clouds = jnp.asarray(rng.normal(size=(4, 64, 3)), jnp.float32)
+    new_fn = jax.jit(model.batched_forward)
+    with warnings.catch_warnings():        # the shim warns at trace time
+        warnings.simplefilter("ignore", DeprecationWarning)
+        old_fn = jax.jit(
+            lambda c: pn.batched_forward(params, cfg_t, c, program=prog))
+        us_new = _time(new_fn, clouds, iters=iters)
+        us_old = _time(old_fn, clouds, iters=iters)
+    rows.append(row(
+        "api/compiled_batched_forward/4x64", us_new,
+        f"legacy_us={us_old:.3f};dispatch_overhead="
+        f"{us_new / max(us_old, 1e-9):.2f}x"))
     return rows

@@ -2,24 +2,24 @@
 
 Builds a PointNet++ workload (paper Model 0), runs the four accelerator
 design points through the simulator, and prints the Fig. 7/8 headline
-numbers next to the paper's. Then shows the JAX-side twin: the scheduler's
-execution order feeding the Pallas aggregation kernel, and the DMA-elision
-(locality) win of the paper's reordering.
+numbers next to the paper's. Then the execution side, through the unified
+``compile_model`` API (the single entry point — DESIGN.md §9):
 
-Finally, the weight-stationary execution engine: the model's MLP weights
-are programmed into crossbar plane tensors ONCE (a CrossbarProgram, like
-programming the ReRAM arrays), and each SA layer's whole 3-stage MLP runs
-as a single fused Pallas kernel with inter-layer activations kept on-chip
-— classification agrees with the float model, with zero weight encoding
-in the hot path.
+  compile : ``compile_model(params, config, backend='reram-fused',
+            schedule='pointer')`` programs every MLP into crossbar plane
+            tensors ONCE (a CrossbarProgram, like programming the ReRAM
+            arrays) and selects the paper's execution order.
+  execute : each SA layer runs its centers in plan order, gathering
+            neighbor features through the scalar-prefetch Pallas kernel —
+            the reordering elides HBM→VMEM DMAs — and each 3-stage MLP is
+            a single fused kernel with inter-layer activations on-chip.
+            Logits are bitwise independent of the order; classification
+            agrees with the float model.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
-from repro.core import (DESIGN_POINTS, MODE_PRESETS, PAPER_MODELS,
-                        PointNetWorkload, build_plan, run_design)
-from repro.kernels import count_dma_elisions
+from repro import PAPER_MODELS, PointNetWorkload, compile_model
+from repro.core import run_design
 
 PAPER = {"pointer": (40, 22)}
 
@@ -35,35 +35,39 @@ def main():
     print(f"{'paper says':12s} {'':>10s} {'40.0x':>9s} {'':>11s} {'22.0x':>7s}"
           "   (model0)\n")
 
-    # the same schedule drives the TPU-side aggregation kernel
-    for mode in ("baseline", "pointer"):
-        plan = build_plan(wl, **MODE_PRESETS[mode])
-        order = plan.order_of(1)
-        el = count_dma_elisions(wl.neighbors[1][order], window=72)
-        print(f"aggregate-kernel DMA elision with {mode:9s} order "
-              f"(72-row VMEM window): {el['elision_rate']:.1%} "
-              f"({el['dma']} DMAs)")
-
-    # weight-stationary crossbar programs + fused multi-layer MLP kernel
     import jax
     import jax.numpy as jnp
     from repro.models import pointnet2 as pn
 
     cfg = PAPER_MODELS["model0"]
     params = pn.init_params(jax.random.PRNGKey(0), cfg)
-    program = pn.build_model_program(params)     # weights encoded ONCE here
-    planes_kb = sum(int(np.prod(p.planes.shape))
-                    for p in program["sa"] + [program["head"]]) / 1024
     cloud = jnp.asarray(wl.points[0], jnp.float32)
-    logits_f = pn.forward(params, cfg, cloud)
-    logits_q = pn.forward(params, cfg, cloud, program=program)
-    n_mlps = len(program["sa"]) + 1
+
+    # the same schedule now drives the execution path: plan-ordered gathers
+    # through the aggregation kernel elide DMAs, logits don't change
+    for mode in ("baseline", "pointer"):
+        el = compile_model(params, cfg, schedule=mode).stats(
+            wl.points[0], window=72)["dma"]
+        print(f"aggregate-kernel DMA elision with {mode:9s} order "
+              f"(72-row VMEM window): {el['elision_rate']:.1%} "
+              f"({el['dma']} DMAs)")
+
+    model_f = compile_model(params, cfg)                      # float baseline
+    model_q = compile_model(params, cfg, backend="reram-fused",
+                            schedule="pointer")               # the paper
+    logits_f = model_f.forward(cloud)
+    logits_q = model_q.forward(cloud)
+    st = model_q.stats()
     launches = sum(len(p) for p in params["sa"]) + len(params["head"])
-    print(f"\nreram-fused backend: {planes_kb:.0f} KB of cell planes "
+    n_mlps = cfg.n_layers + 1
+    modes = {k: v["mode"] for k, v in st["fused_plan"].items()}
+    print(f"\nreram-fused backend: {st['program_bytes'] / 1024:.0f} KB "
           f"programmed once, {n_mlps} fused kernel launches per forward "
-          f"(vs {launches} per-matmul launches); "
+          f"(vs {launches} per-matmul launches), fused plans {modes}; "
           f"float argmax {int(jnp.argmax(logits_f))} == "
-          f"fused argmax {int(jnp.argmax(logits_q))}")
+          f"fused argmax {int(jnp.argmax(logits_q))}; "
+          f"executed-gather elision "
+          f"{st['dma']['elision_rate']:.1%}")
 
 
 if __name__ == "__main__":

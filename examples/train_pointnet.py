@@ -14,8 +14,8 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import PAPER_MODELS, compile_model
 from repro.checkpoint import save_checkpoint
-from repro.core import PAPER_MODELS
 from repro.data import PointCloudDataset
 from repro.launch.fault import GracefulShutdown, StragglerWatchdog
 from repro.models import pointnet2 as pn
@@ -47,9 +47,11 @@ def main():
 
     @functools.partial(jax.jit, donate_argnums=(0, 1))
     def step(params, opt, clouds, labels):
+        # compile_model under jit is free for the float backend — it only
+        # builds the Python dispatch closure; gradients flow through it
         (loss, acc), grads = jax.value_and_grad(
-            lambda p: pn.loss_fn(p, cfg, clouds, labels), has_aux=True
-        )(params)
+            lambda p: compile_model(p, cfg).loss_fn(clouds, labels),
+            has_aux=True)(params)
         params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
         return params, opt, loss, acc
 

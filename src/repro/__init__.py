@@ -1,0 +1,39 @@
+"""repro — Pointer (ReRAM point-cloud accelerator) reproduction on JAX/Pallas.
+
+Public API surface (``import repro``):
+
+  compile_model / CompiledModel : the single entry point for running
+      PointNet++ on any registered backend ('float', 'reram',
+      'reram-fused') under any schedule (``repro.models.backend``)
+  register_backend / available_backends : extend the backend registry
+  build_plan / MODE_PRESETS / ExecutionPlan : paper Algorithm 1 scheduling
+  CrossbarProgram : weight-stationary crossbar program (program-once)
+  PAPER_MODELS / PointNetConfig / PointNetWorkload : Table-1 workloads
+
+Everything else stays importable from its submodule (``repro.core``,
+``repro.kernels``, ``repro.models``, ...).
+"""
+from repro.core.schedule import ExecutionPlan, MODE_PRESETS, build_plan
+from repro.core.workload import (PAPER_MODELS, PointNetConfig,
+                                 PointNetWorkload)
+from repro.kernels import CrossbarProgram
+from repro.models.backend import (Backend, CompiledModel, available_backends,
+                                  compile_model, register_backend)
+
+__version__ = "0.3.0"
+
+__all__ = [
+    "Backend",
+    "CompiledModel",
+    "CrossbarProgram",
+    "ExecutionPlan",
+    "MODE_PRESETS",
+    "PAPER_MODELS",
+    "PointNetConfig",
+    "PointNetWorkload",
+    "available_backends",
+    "build_plan",
+    "compile_model",
+    "register_backend",
+    "__version__",
+]

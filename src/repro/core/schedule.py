@@ -43,11 +43,15 @@ __all__ = [
 IntraMode = Literal["index", "greedy", "morton"]
 
 
-@dataclass
+@dataclass(frozen=True)
 class ExecutionPlan:
     """orders[k-1]: execution order (point indices) of layer k (k=1..L).
     trace: the interleaved execution sequence [(layer, point_idx), ...] —
     Eq. (1)/(2) of the paper. Each point appears exactly once.
+
+    Immutable: a plan fully describes one execution and is consumed by both
+    the simulator and the compiled-model execution path
+    (``repro.models.backend``); ``intra`` is set by whoever builds it.
     """
 
     orders: list[np.ndarray]
@@ -118,8 +122,8 @@ def morton_order(points: np.ndarray, nbits: int = 10) -> np.ndarray:
     return np.argsort(_interleave_bits(q, nbits), kind="stable")
 
 
-def coordinate_layers(workload: PointNetWorkload,
-                      last_order: np.ndarray) -> ExecutionPlan:
+def coordinate_layers(workload: PointNetWorkload, last_order: np.ndarray,
+                      *, intra: str = "custom") -> ExecutionPlan:
     """Paper Algorithm 1, lines 9-13 (+ the dedup described in §3.2): walk
     the last layer in ``last_order``; recursively schedule each point's
     receptive-field members in lower layers immediately before it, skipping
@@ -144,11 +148,11 @@ def coordinate_layers(workload: PointNetWorkload,
         execute(L, int(j))
     return ExecutionPlan(
         orders=[np.asarray(orders[k], dtype=np.int64) for k in range(1, L + 1)],
-        trace=trace, intra="?", coordinated=True)
+        trace=trace, intra=intra, coordinated=True)
 
 
-def _layer_by_layer(workload: PointNetWorkload,
-                    last_order: np.ndarray) -> ExecutionPlan:
+def _layer_by_layer(workload: PointNetWorkload, last_order: np.ndarray,
+                    *, intra: str = "custom") -> ExecutionPlan:
     """No coordination: each SA layer completes before the next begins.
     Lower layers run in index order (paper §3.1); the last layer runs in
     ``last_order`` (index order for the baseline / Pointer-1 / Pointer-12)."""
@@ -157,7 +161,7 @@ def _layer_by_layer(workload: PointNetWorkload,
               for k in range(1, L + 1)]
     orders[L - 1] = np.asarray(last_order, dtype=np.int64)
     trace = [(k, int(i)) for k in range(1, L + 1) for i in orders[k - 1]]
-    return ExecutionPlan(orders=orders, trace=trace, intra="?",
+    return ExecutionPlan(orders=orders, trace=trace, intra=intra,
                          coordinated=False)
 
 
@@ -172,10 +176,8 @@ def build_plan(workload: PointNetWorkload, *, intra: IntraMode = "index",
         last_order = morton_order(last_pts)
     else:
         raise ValueError(f"unknown intra mode {intra!r}")
-    plan = (coordinate_layers(workload, last_order) if coordinated
-            else _layer_by_layer(workload, last_order))
-    plan.intra = intra
-    return plan
+    return (coordinate_layers(workload, last_order, intra=intra) if coordinated
+            else _layer_by_layer(workload, last_order, intra=intra))
 
 
 #: Paper design points: ``(intra, coordinated)``.

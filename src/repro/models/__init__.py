@@ -1,2 +1,13 @@
 """Model definitions: PointNet++ (the paper's workload) and the assigned
-LM architecture family (dense / GQA / MoE / Mamba2 / RWKV6 / cross-attn)."""
+LM architecture family (dense / GQA / MoE / Mamba2 / RWKV6 / cross-attn).
+
+``repro.models.backend`` is the execution entry point: a backend registry
+plus ``compile_model`` returning a ``CompiledModel`` (re-exported here and
+from the top-level ``repro`` package)."""
+from repro.models.backend import (Backend, CompiledModel, available_backends,
+                                  compile_model, register_backend)
+
+__all__ = [
+    "Backend", "CompiledModel", "available_backends", "compile_model",
+    "register_backend",
+]

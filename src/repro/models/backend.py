@@ -1,0 +1,507 @@
+"""Unified backend/compile API: ``compile_model`` + the backend registry.
+
+This module is the single entry point for running PointNet++ on the ReRAM
+twin. It replaces the implicit-kwarg backend selection that used to thread
+``matmul=`` / ``program=`` through ``forward``/``batched_forward``/
+``loss_fn`` (kept as deprecated shims in ``repro.models.pointnet2``; see
+DESIGN.md §9 for the migration table).
+
+Lifecycle — the same three phases as the accelerator:
+
+  program : ``compile_model(params, config, backend=...)`` resolves the
+            backend by name from the registry and lets it do its one-time
+            work (the 'reram-fused' backend quantizes + plane-encodes every
+            MLP into a :class:`~repro.kernels.CrossbarProgram` here, exactly
+            once — crossbar programming).
+  plan    : ``schedule=`` picks the execution order (paper Algorithm 1).
+            ``"baseline"`` is plain layer-by-layer index order; any other
+            preset / ``{"intra": ..., "coordinated": ...}`` spec / prebuilt
+            :class:`~repro.core.schedule.ExecutionPlan` routes execution
+            through the plan.
+  execute : ``CompiledModel.forward``/``batched_forward``/``loss_fn``/
+            ``eval_step``. Under a plan, each SA layer runs its centers in
+            ``plan.order_of(k)`` and the gather stage goes through the
+            scalar-prefetch ``aggregate_diff`` kernel with plan-ordered
+            indices — consecutive grid steps hitting the same feature row
+            elide the HBM→VMEM copy, so the paper's reordering directly
+            removes DMAs. Results are scattered back to index order after
+            the per-center max reduction (rows are independent and the
+            reduction is a max), so logits are bitwise invariant to the
+            order; only the DMA traffic changes.
+
+Backends register with the :func:`register_backend` decorator; the three
+built-ins ('float', 'reram', 'reram-fused') are ordinary registry entries,
+and upcoming variants (M-tiled activation panels, j-outer weight
+re-streaming — see ROADMAP) plug in the same way instead of growing new
+kwargs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.schedule import ExecutionPlan, MODE_PRESETS, build_plan
+from repro.core.workload import PointNetConfig, PointNetWorkload
+from repro.kernels import (aggregate_diff, count_dma_elisions, plan_fused_mlp,
+                           reram_linear, reram_mlp_fused,
+                           reram_mlp_fused_batched)
+from repro.models import pointnet2 as _pn
+
+__all__ = [
+    "Backend",
+    "CompiledModel",
+    "available_backends",
+    "compile_model",
+    "register_backend",
+]
+
+Params = Any
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, type["Backend"]] = {}
+
+
+def register_backend(name: str) -> Callable[[type], type]:
+    """Class decorator: make ``compile_model(..., backend=name)`` resolve to
+    the decorated :class:`Backend` subclass. Registering an existing name
+    replaces it (latest wins), so experiments can shadow a built-in; a
+    class registered under several names keeps its first name as the class
+    default (``compile_model`` stamps the instance with the name it
+    resolved, so ``backend_name`` always reports the registry entry
+    used)."""
+    def deco(cls: type) -> type:
+        if getattr(cls, "name", "?") == "?":
+            cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# backends: how one MLP is applied
+# ---------------------------------------------------------------------------
+
+class Backend:
+    """One way of running the model's MLPs. ``key`` addresses an MLP:
+    ``("sa", i)`` for SA layer i's 3-stage MLP, ``"head"`` for the
+    classification head. ``apply_mlp`` must accept any leading dims on
+    ``x``; ``apply_mlp_batched`` additionally treats axis 0 as a batch of
+    independent clouds (backends with ``batched_in_grid = True`` fold it
+    into one kernel launch and are never vmapped over)."""
+
+    name = "?"
+    #: True when ``apply_mlp_batched`` folds the batch into the kernel grid
+    #: (the compiled model then vmaps only the geometry, never the kernel).
+    batched_in_grid = False
+
+    def __init__(self, params: Params, config: PointNetConfig):
+        self.params = params
+        self.config = config
+
+    def _mlp_params(self, key):
+        return (self.params["head"] if key == "head"
+                else self.params["sa"][key[1]])
+
+    def apply_mlp(self, key, x, *, final_relu: bool = True):
+        raise NotImplementedError
+
+    def apply_mlp_batched(self, key, x, *, final_relu: bool = True):
+        return self.apply_mlp(key, x, final_relu=final_relu)
+
+    def stats(self) -> dict:
+        return {"program_bytes": 0}
+
+
+@register_backend("float")
+class FloatBackend(Backend):
+    """Plain ``a @ w`` (or a caller-supplied ``matmul`` — the hook the old
+    ``matmul=`` kwarg maps onto)."""
+
+    def __init__(self, params, config, *, matmul=None):
+        super().__init__(params, config)
+        self.matmul = matmul
+
+    def apply_mlp(self, key, x, *, final_relu=True):
+        return _pn._apply_mlp(self._mlp_params(key), x,
+                              final_relu=final_relu, matmul=self.matmul)
+
+
+@register_backend("reram")
+class ReramPerLayerBackend(FloatBackend):
+    """Per-layer bit-sliced INT8 crossbar matmul (``reram_linear``): same
+    arithmetic as the fused path but weights are re-quantized and
+    re-plane-encoded inside every traced call, one kernel launch per
+    matmul. Kept as the reference the fused kernel is tested against."""
+
+    def __init__(self, params, config, *, interpret: bool = True):
+        super().__init__(
+            params, config,
+            matmul=lambda a, w: reram_linear(a, w, interpret=interpret))
+
+
+@register_backend("reram-fused")
+class ReramFusedBackend(Backend):
+    """Weight-stationary path: every MLP programmed into crossbar planes
+    exactly once at compile time (or pass a prebuilt ``program=`` from
+    :func:`repro.models.pointnet2.build_model_program`), then each MLP runs
+    as ONE fused ``pallas_call`` with inter-layer activations in VMEM."""
+
+    batched_in_grid = True
+
+    def __init__(self, params, config, *, program=None,
+                 block_n: int | None = None, block_k: int | None = None,
+                 interpret: bool = True):
+        super().__init__(params, config)
+        self.program = (program if program is not None
+                        else _pn.build_model_program(params))
+        self.block_n = block_n
+        self.block_k = block_k
+        self.interpret = interpret
+
+    def _prog(self, key):
+        return (self.program["head"] if key == "head"
+                else self.program["sa"][key[1]])
+
+    def apply_mlp(self, key, x, *, final_relu=True):
+        return reram_mlp_fused(x, self._prog(key), final_relu=final_relu,
+                               block_n=self.block_n, block_k=self.block_k,
+                               interpret=self.interpret)
+
+    def apply_mlp_batched(self, key, x, *, final_relu=True):
+        return reram_mlp_fused_batched(
+            x, self._prog(key), final_relu=final_relu, block_n=self.block_n,
+            block_k=self.block_k, interpret=self.interpret)
+
+    def stats(self) -> dict:
+        progs = {f"sa{i}": p for i, p in enumerate(self.program["sa"])}
+        progs["head"] = self.program["head"]
+        nbytes = {k: sum(l.nbytes for l in jax.tree_util.tree_leaves(p))
+                  for k, p in progs.items()}
+        plans = {}
+        for i, spec in enumerate(self.config.layers):
+            rows = spec.n_centers * spec.n_neighbors
+            plans[f"sa{i}"] = self._plan_row(self.program["sa"][i], rows)
+        plans["head"] = self._plan_row(self.program["head"], 1)
+        return {"program_bytes": sum(nbytes.values()),
+                "program_bytes_per_mlp": nbytes,
+                "fused_plan": plans}
+
+    def _plan_row(self, prog, rows):
+        fp = plan_fused_mlp(prog, rows, block_n=self.block_n,
+                            block_k=self.block_k)
+        return {"mode": "tiled" if fp.tiled else "whole",
+                "block_n": fp.block_n, "vmem_bytes": fp.vmem_bytes,
+                "fits_budget": fp.fits_budget}
+
+
+# ---------------------------------------------------------------------------
+# schedule canonicalization
+# ---------------------------------------------------------------------------
+
+def _canonical_schedule(schedule):
+    """-> (spec_dict, plan_or_None, planned: bool). ``spec_dict`` always has
+    'intra' and 'coordinated'; ``planned`` is False only for the plain
+    layer-by-layer index-order fast path (== the 'baseline' preset)."""
+    if schedule is None:
+        schedule = "baseline"
+    if isinstance(schedule, ExecutionPlan):
+        return ({"intra": schedule.intra,
+                 "coordinated": schedule.coordinated}, schedule, True)
+    if isinstance(schedule, Mapping):
+        spec = dict(schedule)
+        unknown = set(spec) - {"intra", "coordinated"}
+        if unknown:
+            raise ValueError(f"unknown schedule keys {sorted(unknown)}; "
+                             f"expected 'intra' and 'coordinated'")
+        spec.setdefault("intra", "index")
+        spec.setdefault("coordinated", False)
+        if spec["intra"] not in ("index", "greedy", "morton"):
+            raise ValueError(f"unknown intra mode {spec['intra']!r}; "
+                             f"expected 'index', 'greedy' or 'morton'")
+        return spec, None, True
+    if isinstance(schedule, str):
+        if schedule not in MODE_PRESETS:
+            raise ValueError(
+                f"unknown schedule {schedule!r}; expected one of "
+                f"{sorted(MODE_PRESETS)}, a {{'intra', 'coordinated'}} "
+                f"mapping, or an ExecutionPlan")
+        return dict(MODE_PRESETS[schedule]), None, schedule != "baseline"
+    raise TypeError(f"schedule must be a preset name, a mapping, or an "
+                    f"ExecutionPlan; got {type(schedule).__name__}")
+
+
+def _inverse_permutation(order: np.ndarray) -> np.ndarray:
+    inv = np.empty_like(order)
+    inv[order] = np.arange(order.shape[0], dtype=order.dtype)
+    return inv
+
+
+def _complete_order(order: np.ndarray, n: int, layer: int) -> np.ndarray:
+    """A coordinated plan schedules a lower-layer point only when some
+    last-layer receptive field needs it; points outside every field are
+    dead compute for the network output and absent from the order. The
+    dense kernels still run all ``n`` rows (the fused MLP's quant scales
+    are global over the launch), so append the orphans at the tail — after
+    every scheduled point, changing no scheduled DMA — to complete the
+    permutation."""
+    if order.shape[0] == n:
+        return order
+    if order.shape[0] > n or np.unique(order).shape[0] != order.shape[0] \
+            or (order.size and (order.min() < 0 or order.max() >= n)):
+        raise ValueError(
+            f"ExecutionPlan layer-{layer} order has {order.shape[0]} points "
+            f"(distinct in [0, {n})) expected; got an incompatible order")
+    missing = np.setdiff1d(np.arange(n, dtype=order.dtype), order)
+    return np.concatenate([order, missing])
+
+
+# ---------------------------------------------------------------------------
+# the compiled model
+# ---------------------------------------------------------------------------
+
+class CompiledModel:
+    """The executable returned by :func:`compile_model`. Holds a programmed
+    backend plus a schedule; exposes the whole old surface as methods."""
+
+    def __init__(self, backend: Backend, config: PointNetConfig,
+                 schedule_spec: dict, plan: ExecutionPlan | None,
+                 planned: bool):
+        self.backend = backend
+        self.config = config
+        self._spec = schedule_spec
+        self._plan = plan          # user-supplied plan, reused as-is
+        self._planned = planned
+        self._jit_eval = None
+        self._last_dma: dict | None = None
+
+    # -- public metadata ----------------------------------------------------
+
+    @property
+    def backend_name(self) -> str:
+        return self.backend.name
+
+    @property
+    def schedule(self) -> dict:
+        """The canonical ``{'intra': ..., 'coordinated': ...}`` spec (round-
+        trips ``MODE_PRESETS`` names passed to ``compile_model``)."""
+        return dict(self._spec)
+
+    # -- execution ----------------------------------------------------------
+
+    def forward(self, cloud: jnp.ndarray) -> jnp.ndarray:
+        """Single cloud (N, 3) -> logits (n_classes,)."""
+        if self._planned:
+            return self._forward_planned(cloud)
+        return self._forward_base(cloud)
+
+    def batched_forward(self, clouds: jnp.ndarray) -> jnp.ndarray:
+        """Batch (B, N, 3) -> logits (B, n_classes). Grid-batched backends
+        get ONE kernel launch per MLP for the whole batch (geometry only is
+        vmapped); others vmap the single-cloud forward. Under a non-baseline
+        schedule each cloud has its own plan, so clouds run one at a time."""
+        if self._planned:
+            return jnp.stack([self._forward_planned(c) for c in clouds])
+        if self.backend.batched_in_grid:
+            return self._batched_in_grid(clouds)
+        return jax.vmap(self._forward_base)(clouds)
+
+    def loss_fn(self, clouds, labels):
+        """Mean NLL + accuracy over a batch (same contract as the old
+        ``pointnet2.loss_fn``)."""
+        logits = self.batched_forward(clouds)
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+        acc = (jnp.argmax(logits, axis=1) == labels).mean()
+        return nll, acc
+
+    def eval_step(self, clouds, labels):
+        """Jit-compiled ``loss_fn`` (cached per compiled model). Plan-driven
+        schedules build their plan on host per cloud and therefore run
+        eagerly — only the kernels underneath are jitted."""
+        if self._planned:
+            return self.loss_fn(clouds, labels)
+        if self._jit_eval is None:
+            self._jit_eval = jax.jit(self.loss_fn)
+        return self._jit_eval(clouds, labels)
+
+    # -- introspection ------------------------------------------------------
+
+    def stats(self, cloud=None, *, workload: PointNetWorkload | None = None,
+              window: int = 72) -> dict:
+        """Compile/execution report: backend name, schedule spec, program
+        bytes and fused-plan mode (whole/tiled) per MLP for programmed
+        backends, and — given a ``cloud`` or prebuilt ``workload`` (else the
+        one cached by the last planned ``forward``) — the predicted DMA
+        elisions of the aggregate gather under this schedule, per layer,
+        via ``count_dma_elisions`` with a ``window``-row VMEM working set."""
+        s = {"backend": self.backend_name, "schedule": self.schedule,
+             "planned": self._planned}
+        s.update(self.backend.stats())
+        dma = None
+        if cloud is not None or workload is not None:
+            if workload is None:
+                workload = PointNetWorkload.build(
+                    np.asarray(cloud, np.float64), self.config)
+            plan = (self._plan if self._plan is not None
+                    else build_plan(workload, **self._spec))
+            dma = self._dma_report(plan,
+                                   [np.asarray(nb)
+                                    for nb in workload.neighbors[1:]],
+                                   window)
+        elif self._last_dma is not None:
+            dma = self._last_dma if self._last_dma["window"] == window else {
+                **self._dma_report(None, None, window,
+                                   streams=self._last_dma["_streams"]),
+            }
+        if dma is not None:
+            s["dma"] = {k: v for k, v in dma.items() if k != "_streams"}
+        return s
+
+    @staticmethod
+    def _dma_report(plan, neighbors, window, streams=None) -> dict:
+        """Per-layer + total elision counts for the plan-ordered neighbor
+        index streams that drive ``aggregate_diff``."""
+        if streams is None:
+            streams = [nb[_complete_order(np.asarray(plan.order_of(k)),
+                                          nb.shape[0], k)]
+                       for k, nb in enumerate(neighbors, start=1)]
+        layers = [count_dma_elisions(st, window=window) for st in streams]
+        steps = sum(l["steps"] for l in layers)
+        elided = sum(l["elided"] for l in layers)
+        return {"window": window, "layers": layers, "steps": steps,
+                "elided": elided, "dma": steps - elided,
+                "elision_rate": elided / max(1, steps),
+                "_streams": streams}
+
+    # -- execution internals ------------------------------------------------
+
+    def _forward_base(self, cloud):
+        """Layer-by-layer index-order execution — identical structure (and
+        bitwise-identical results per backend) to the pre-registry
+        ``pointnet2.forward``."""
+        cfg = self.config
+        feats = _pn.lift_features(cloud, cfg.layers[0].in_features)
+        pts = cloud
+        for i, spec in enumerate(cfg.layers):
+            pts, diff = _pn._sa_geometry(spec, pts, feats)
+            h = self.backend.apply_mlp(("sa", i), diff)
+            feats = jnp.max(h, axis=1)                   # reduction over K
+        g = jnp.max(feats, axis=0)                       # global max pool
+        return self.backend.apply_mlp("head", g, final_relu=False)
+
+    def _batched_in_grid(self, clouds):
+        """Batch-in-grid execution: vmap only the per-cloud geometry; every
+        MLP is ONE batched kernel launch (never vmap over the kernel)."""
+        cfg = self.config
+        feats = jax.vmap(
+            lambda c: _pn.lift_features(c, cfg.layers[0].in_features))(clouds)
+        pts = clouds
+        for i, spec in enumerate(cfg.layers):
+            pts, diff = jax.vmap(
+                functools.partial(_pn._sa_geometry, spec))(pts, feats)
+            h = self.backend.apply_mlp_batched(("sa", i), diff)
+            feats = jnp.max(h, axis=2)                   # reduction over K
+        g = jnp.max(feats, axis=1)                       # global max pool
+        return self.backend.apply_mlp_batched("head", g, final_relu=False)
+
+    def _forward_planned(self, cloud):
+        """Plan-driven execution. Pass 1 computes the geometry (same FPS/kNN
+        as the base path); the plan is built from exactly that geometry, so
+        ``order_of(k)`` permutes exactly the rows being gathered. Pass 2
+        runs each SA layer's centers in plan order, gathering neighbor
+        differences through the scalar-prefetch ``aggregate_diff`` kernel —
+        the plan-ordered index stream is what elides DMAs — then scatters
+        the per-center max back to index order, which makes the logits
+        bitwise independent of the order."""
+        cfg = self.config
+        feats = _pn.lift_features(cloud, cfg.layers[0].in_features)
+        pts_list, ctr_list, nbr_list = [cloud], [None], [None]
+        pts = cloud
+        for spec in cfg.layers:
+            centers = _pn.farthest_point_sample(pts, spec.n_centers)
+            c_pts = pts[centers]
+            nbr = _pn.knn(c_pts, pts, spec.n_neighbors)
+            pts_list.append(c_pts)
+            ctr_list.append(centers)
+            nbr_list.append(nbr)
+            pts = c_pts
+
+        plan = self._plan_for(pts_list, ctr_list, nbr_list)
+        tracing = isinstance(cloud, jax.core.Tracer)
+        streams = []
+        for k, spec in enumerate(cfg.layers, start=1):
+            order = _complete_order(np.asarray(plan.order_of(k)),
+                                    spec.n_centers, k)
+            inv = _inverse_permutation(order)
+            nbr_o = nbr_list[k][order].astype(jnp.int32)
+            ctr_o = ctr_list[k][order].astype(jnp.int32)
+            if not tracing:
+                streams.append(np.asarray(nbr_o))
+            diff = aggregate_diff(feats, nbr_o, ctr_o)   # plan-ordered gather
+            h = self.backend.apply_mlp(("sa", k - 1), diff)
+            out = jnp.max(h, axis=1)                     # reduction over K
+            feats = out[inv]                             # back to index order
+        if not tracing:
+            self._last_dma = self._dma_report(None, None, 72, streams=streams)
+        g = jnp.max(feats, axis=0)
+        return self.backend.apply_mlp("head", g, final_relu=False)
+
+    def _plan_for(self, pts_list, ctr_list, nbr_list) -> ExecutionPlan:
+        if self._plan is not None:
+            return self._plan
+        if any(isinstance(p, jax.core.Tracer) for p in pts_list):
+            raise TypeError(
+                "compile_model(schedule=...) builds its ExecutionPlan on the "
+                "host and cannot run under jit/vmap tracing; jit the "
+                "'baseline' schedule, or pass a prebuilt ExecutionPlan")
+        wl = PointNetWorkload(
+            config=self.config,
+            points=[np.asarray(p, np.float64) for p in pts_list],
+            centers=[None] + [np.asarray(c) for c in ctr_list[1:]],
+            neighbors=[None] + [np.asarray(nb) for nb in nbr_list[1:]])
+        return build_plan(wl, **self._spec)
+
+
+# ---------------------------------------------------------------------------
+# the entry point
+# ---------------------------------------------------------------------------
+
+def compile_model(params: Params, config: PointNetConfig, *,
+                  backend: str = "float", schedule="baseline",
+                  **backend_opts) -> CompiledModel:
+    """Compile PointNet++ ``params`` for execution.
+
+    backend  : registry name — 'float', 'reram' (per-layer INT8 crossbar),
+               'reram-fused' (weight-stationary fused kernels), or anything
+               added with :func:`register_backend`. ``backend_opts`` go to
+               the backend constructor (e.g. ``program=``, ``block_n=``).
+    schedule : 'baseline' (plain layer-by-layer index order, jit-friendly),
+               a ``MODE_PRESETS`` name ('pointer-1', 'pointer-12',
+               'pointer', 'pointer-morton'), an ``{'intra', 'coordinated'}``
+               mapping, or a prebuilt :class:`ExecutionPlan`. Non-baseline
+               schedules execute each SA layer in plan order through the
+               ``aggregate_diff`` gather kernel (fewer DMAs, same logits).
+    """
+    if not isinstance(backend, str):
+        raise TypeError(f"backend must be a registry name string; got "
+                        f"{type(backend).__name__}")
+    try:
+        cls = _REGISTRY[backend]
+    except KeyError:
+        raise ValueError(f"unknown backend {backend!r}; registered backends: "
+                         f"{available_backends()}") from None
+    spec, plan, planned = _canonical_schedule(schedule)
+    be = cls(params, config, **backend_opts)
+    be.name = backend            # the registry entry actually resolved
+    return CompiledModel(be, config, spec, plan, planned)

@@ -14,30 +14,31 @@ geometry functions are the JAX twins of the NumPy ones in
 dry-run/trainer lower, while ``repro.core`` is what the accelerator
 simulator consumes.
 
-The MLP supports three backends:
+Backend selection lives in ``repro.models.backend`` (the registry +
+``compile_model`` entry point); this module keeps the geometry primitives
+(FPS, kNN, ``_sa_geometry``), parameter init, ``build_model_program``, and
+``_apply_mlp`` that the registered backends compose, plus
+``forward``/``batched_forward``/``loss_fn`` as thin delegates whose old
+``matmul=`` / ``program=`` kwargs are deprecated shims (one release) for:
 
-  float         : plain ``a @ w`` (default; ``matmul=None``)
-  'reram'       : pass ``matmul=reram_linear`` — same INT8 / 2-bit-cell
-                  bit-sliced arithmetic as the crossbar, but weights are
-                  re-quantized and re-plane-encoded inside every traced
-                  call, and each MLP stage is its own kernel launch
-  'reram-fused' : pass ``program=build_model_program(params)`` —
-                  the weight-stationary path. Weights are encoded exactly
-                  once at program time (mirroring crossbar programming);
-                  each SA-layer MLP and the head run as ONE fused
-                  ``pallas_call`` with inter-layer activations in VMEM
-                  (``repro.kernels.fused_mlp``). Under ``batched_forward``
-                  the batch dimension is folded into the kernel grid
-                  (``reram_mlp_fused_batched``) — one launch per MLP for
-                  the whole batch, no vmap over the kernel.
+  float         : ``compile_model(params, config)`` — plain ``a @ w``
+  'reram'       : ``compile_model(..., backend='reram')`` — per-layer INT8 /
+                  2-bit-cell bit-sliced crossbar matmuls, weights
+                  re-encoded inside every traced call
+  'reram-fused' : ``compile_model(..., backend='reram-fused')`` — the
+                  weight-stationary path: weights encoded exactly once at
+                  program time, each MLP ONE fused ``pallas_call``
+                  (batch-in-grid under ``batched_forward``)
 
 Both ReRAM backends are numerically the quantized network (paper's
 no-accuracy-variation property); the fused path shares the per-layer
-path's integer arithmetic exactly.
+path's integer arithmetic exactly. See DESIGN.md §9 for the migration
+table.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Any
 
 import jax
@@ -45,8 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.workload import PointNetConfig, SALayerSpec
-from repro.kernels import (build_program, reram_mlp_fused,
-                           reram_mlp_fused_batched)
+from repro.kernels import build_program, reram_mlp_fused
 
 Params = Any
 
@@ -159,8 +159,15 @@ def sa_layer(mlp_params, spec: SALayerSpec, points, features, *,
              matmul=None, program=None):
     """One set-abstraction layer on a single cloud.
     points (N, 3), features (N, C_in) -> (M, 3), (M, C_out).
-    With ``program`` set, the 3-stage MLP runs as a single fused
-    ``pallas_call`` over the pre-encoded weight-stationary planes."""
+    The ``matmul=``/``program=`` backend selectors are deprecated like the
+    ones on ``forward`` — compose ``_sa_geometry`` with a registered
+    backend's ``apply_mlp`` instead (``repro.models.backend``)."""
+    if matmul is not None or program is not None:
+        warnings.warn(
+            "pointnet2.sa_layer(matmul=/program=...) is deprecated; use "
+            "repro.compile_model(params, config, backend=...) — see the "
+            "migration table in DESIGN.md §9", DeprecationWarning,
+            stacklevel=2)
     c_pts, diff = _sa_geometry(spec, points, features)
     if program is not None:
         h = reram_mlp_fused(diff, program)              # feature comp. M(.)
@@ -170,57 +177,50 @@ def sa_layer(mlp_params, spec: SALayerSpec, points, features, *,
     return c_pts, out
 
 
+def _compile_legacy(params, config, *, matmul, program, caller: str):
+    """Map the deprecated ``matmul=``/``program=`` kwargs onto the backend
+    registry (``repro.models.backend``), warning when either is used."""
+    from repro.models.backend import compile_model
+    if matmul is not None and program is not None:
+        raise ValueError("pass either matmul= or program=, not both")
+    if matmul is not None or program is not None:
+        kw = "program=" if program is not None else "matmul="
+        warnings.warn(
+            f"pointnet2.{caller}({kw}...) is deprecated; use "
+            f"repro.compile_model(params, config, backend=...) — see the "
+            f"migration table in DESIGN.md §9", DeprecationWarning,
+            stacklevel=3)
+    if program is not None:
+        return compile_model(params, config, backend="reram-fused",
+                             program=program)
+    return compile_model(params, config, backend="float", matmul=matmul)
+
+
 def forward(params: Params, config: PointNetConfig, cloud: jnp.ndarray, *,
             matmul=None, program=None) -> jnp.ndarray:
     """Single-cloud forward: (N, 3) -> logits (n_classes,).
-    ``program`` (from :func:`build_model_program`) selects the
-    'reram-fused' backend: every SA MLP and the head dispatch through
-    ``reram_mlp_fused`` — one kernel launch per MLP instead of one per
-    matmul, and no weight encoding in the hot path."""
-    feats = lift_features(cloud, config.layers[0].in_features)
-    pts = cloud
-    for i, spec in enumerate(config.layers):
-        pts, feats = sa_layer(
-            params["sa"][i] if params is not None else None, spec, pts,
-            feats, matmul=matmul,
-            program=program["sa"][i] if program is not None else None)
-    g = jnp.max(feats, axis=0)                          # global max pool
-    if program is not None:
-        return reram_mlp_fused(g, program["head"], final_relu=False)
-    return _apply_mlp(params["head"], g, final_relu=False, matmul=matmul)
+
+    Thin delegate to :func:`repro.models.backend.compile_model` — the
+    canonical entry point. The ``matmul=`` / ``program=`` kwargs are the
+    pre-registry backend selectors, kept for one release as deprecated
+    shims (``matmul=`` ≙ ``backend='float'`` with a custom matmul;
+    ``program=`` ≙ ``backend='reram-fused'`` with a prebuilt program)."""
+    return _compile_legacy(params, config, matmul=matmul, program=program,
+                           caller="forward").forward(cloud)
 
 
 def batched_forward(params, config, clouds, *, matmul=None, program=None):
-    """Batch of clouds (B, N, 3) -> logits (B, n_classes).
-
-    Backend selection: the float and 'reram' (per-layer) backends vmap the
-    single-cloud forward. The 'reram-fused' backend (``program`` set) does
-    NOT vmap the kernel — only the per-cloud geometry is vmapped, and every
-    MLP runs as ONE batch-in-grid ``pallas_call``
-    (``reram_mlp_fused_batched``), each cloud keeping its own quantization
-    scales exactly as the vmapped path computed them."""
-    if program is None:
-        return jax.vmap(lambda c: forward(params, config, c,
-                                          matmul=matmul))(clouds)
-    feats = jax.vmap(
-        lambda c: lift_features(c, config.layers[0].in_features))(clouds)
-    pts = clouds
-    for i, spec in enumerate(config.layers):
-        pts, diff = jax.vmap(
-            functools.partial(_sa_geometry, spec))(pts, feats)
-        h = reram_mlp_fused_batched(diff, program["sa"][i])
-        feats = jnp.max(h, axis=2)                      # reduction over K
-    g = jnp.max(feats, axis=1)                          # global max pool
-    return reram_mlp_fused_batched(g, program["head"], final_relu=False)
+    """Batch of clouds (B, N, 3) -> logits (B, n_classes). Thin delegate to
+    the compiled-model API; backend dispatch (vmapped forward for float /
+    per-layer reram, ONE batch-in-grid ``pallas_call`` per MLP for the
+    fused backend) now lives in ``repro.models.backend.CompiledModel``."""
+    return _compile_legacy(params, config, matmul=matmul, program=program,
+                           caller="batched_forward").batched_forward(clouds)
 
 
 def loss_fn(params, config, clouds, labels, *, matmul=None, program=None):
-    logits = batched_forward(params, config, clouds, matmul=matmul,
-                             program=program)
-    logp = jax.nn.log_softmax(logits)
-    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
-    acc = (jnp.argmax(logits, axis=1) == labels).mean()
-    return nll, acc
+    return _compile_legacy(params, config, matmul=matmul, program=program,
+                           caller="loss_fn").loss_fn(clouds, labels)
 
 
 @functools.partial(jax.jit, static_argnames=("config",))

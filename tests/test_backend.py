@@ -1,0 +1,313 @@
+"""compile_model / backend registry / schedule-aware execution.
+
+The redesign's contract, tested end to end:
+  * all three backends selectable by name, unknown names rejected with the
+    registered list, new backends attachable via ``register_backend``;
+  * logits are BITWISE invariant to the execution order (the per-center
+    reduction is a max and rows are scattered back to index order), while
+    the measured DMA-elision count of the plan-ordered gather strictly
+    improves under 'greedy'/'morton' vs 'index' on clustered clouds;
+  * ``MODE_PRESETS`` names round-trip through ``compile_model(schedule=)``;
+  * the old ``matmul=``/``program=`` kwargs still work but warn.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro import (MODE_PRESETS, CompiledModel, available_backends,
+                   build_plan, compile_model, register_backend)
+from repro.core import PointNetWorkload
+from repro.core.workload import PointNetConfig, SALayerSpec
+from repro.models import pointnet2 as pn
+from repro.models import backend as backend_mod
+
+
+def tiny_config(n=64, c1=24, c2=8, k=4):
+    return PointNetConfig(name="tiny", n_points=n, layers=(
+        SALayerSpec(n_centers=c1, n_neighbors=k, in_features=4,
+                    mlp=(4, 8, 8, 16)),
+        SALayerSpec(n_centers=c2, n_neighbors=k, in_features=16,
+                    mlp=(16, 16, 16, 32)),
+    ))
+
+
+def clustered_cloud(seed=0, n_clusters=8, per_cluster=32):
+    """Tight Gaussian clusters: strong receptive-field overlap, so a
+    locality-aware order has plenty of DMAs to elide."""
+    rng = np.random.default_rng(seed)
+    ctrs = rng.normal(size=(n_clusters, 3)) * 4.0
+    return np.concatenate(
+        [c + 0.25 * rng.normal(size=(per_cluster, 3)) for c in ctrs])
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_config()
+    params = pn.init_params(jax.random.PRNGKey(0), cfg, n_classes=10)
+    cloud = jnp.asarray(np.random.default_rng(1).normal(size=(64, 3)),
+                        jnp.float32)
+    return cfg, params, cloud
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_builtin_backends_registered():
+    assert {"float", "reram", "reram-fused"} <= set(available_backends())
+
+
+def test_unknown_backend_names_registered_ones(setup):
+    cfg, params, _ = setup
+    with pytest.raises(ValueError, match="reram-fused"):
+        compile_model(params, cfg, backend="resistive")
+    with pytest.raises(TypeError):
+        compile_model(params, cfg, backend=lambda a, w: a @ w)
+
+
+def test_register_backend_decorator(setup):
+    cfg, params, cloud = setup
+    base = compile_model(params, cfg).forward(cloud)
+
+    @register_backend("float-echo")
+    class EchoBackend(backend_mod.FloatBackend):
+        pass
+
+    try:
+        m = compile_model(params, cfg, backend="float-echo")
+        assert isinstance(m, CompiledModel)
+        assert m.backend_name == "float-echo"
+        assert bool(jnp.all(m.forward(cloud) == base))
+        # shadow-registering an existing class must not rename the original
+        # entry: each compiled model reports the registry name it resolved
+        register_backend("float-alias")(backend_mod.FloatBackend)
+        assert backend_mod.FloatBackend.name == "float"
+        assert compile_model(params, cfg).backend_name == "float"
+        assert compile_model(
+            params, cfg, backend="float-alias").backend_name == "float-alias"
+    finally:
+        backend_mod._REGISTRY.pop("float-echo")
+        backend_mod._REGISTRY.pop("float-alias", None)
+
+
+def test_unknown_schedule_rejected(setup):
+    cfg, params, _ = setup
+    with pytest.raises(ValueError, match="pointer-morton"):
+        compile_model(params, cfg, schedule="zigzag")
+    with pytest.raises(ValueError, match="intra"):
+        compile_model(params, cfg, schedule={"order": "greedy"})
+    # dict-form values are validated eagerly too, not at first forward
+    with pytest.raises(ValueError, match="intra mode"):
+        compile_model(params, cfg, schedule={"intra": "zigzag"})
+
+
+# ---------------------------------------------------------------------------
+# backends match the pre-registry execution bitwise
+# ---------------------------------------------------------------------------
+
+def test_float_backend_matches_legacy_forward(setup):
+    cfg, params, cloud = setup
+    m = compile_model(params, cfg)
+    legacy = pn.forward(params, cfg, cloud)        # plain delegate, no warn
+    assert bool(jnp.all(m.forward(cloud) == legacy))
+    clouds = jnp.stack([cloud, cloud * 0.3])
+    assert bool(jnp.all(m.batched_forward(clouds)
+                        == pn.batched_forward(params, cfg, clouds)))
+
+
+def test_loss_and_eval_step_match_legacy(setup):
+    cfg, params, cloud = setup
+    clouds = jnp.stack([cloud, cloud * 0.3])
+    labels = jnp.asarray([1, 7])
+    m = compile_model(params, cfg)
+    loss, acc = m.loss_fn(clouds, labels)
+    l2, a2 = pn.loss_fn(params, cfg, clouds, labels)
+    assert float(loss) == float(l2) and float(acc) == float(a2)
+    l3, a3 = m.eval_step(clouds, labels)           # jitted, cached
+    assert bool(jnp.isfinite(l3)) and 0.0 <= float(a3) <= 1.0
+
+
+def test_grad_flows_through_compile_model(setup):
+    cfg, params, cloud = setup
+    clouds = jnp.stack([cloud, cloud * 0.3])
+    labels = jnp.asarray([1, 7])
+    g = jax.grad(
+        lambda p: compile_model(p, cfg).loss_fn(clouds, labels)[0])(params)
+    sq = jax.tree_util.tree_reduce(
+        lambda a, l: a + float(jnp.sum(l ** 2)), g, 0.0)
+    assert np.isfinite(sq) and sq > 0.0
+
+
+# ---------------------------------------------------------------------------
+# schedule-aware execution: invariance + locality
+# ---------------------------------------------------------------------------
+
+ORDERS = ({"intra": "index", "coordinated": True},
+          {"intra": "greedy", "coordinated": True},
+          {"intra": "morton", "coordinated": True})
+
+
+def test_logits_bitwise_invariant_across_orders_fused(setup):
+    """The tentpole numerics claim: plan-ordered execution through the
+    ``aggregate_diff`` gather + fused MLP + per-center max, scattered back
+    to index order, gives BITWISE identical logits for every intra-layer
+    order — and identical to the baseline (unplanned) fast path."""
+    cfg, params, cloud = setup
+    base = compile_model(params, cfg, backend="reram-fused").forward(cloud)
+    for sched in ORDERS:
+        m = compile_model(params, cfg, backend="reram-fused", schedule=sched)
+        out = m.forward(cloud)
+        assert np.array_equal(np.asarray(out), np.asarray(base)), sched
+
+
+def test_logits_bitwise_invariant_presets_float(setup):
+    cfg, params, cloud = setup
+    base = compile_model(params, cfg).forward(cloud)
+    for name in MODE_PRESETS:
+        m = compile_model(params, cfg, schedule=name)
+        assert np.array_equal(np.asarray(m.forward(cloud)),
+                              np.asarray(base)), name
+
+
+def test_planned_batched_forward_matches_per_cloud(setup):
+    cfg, params, cloud = setup
+    clouds = jnp.stack([cloud, cloud * 0.5])
+    m = compile_model(params, cfg, backend="reram-fused", schedule="pointer")
+    bat = m.batched_forward(clouds)
+    assert bat.shape[0] == 2
+    for b in range(2):
+        assert bool(jnp.all(bat[b] == m.forward(clouds[b])))
+
+
+def test_dma_elisions_strictly_improve_on_clustered_cloud():
+    """The tentpole locality claim: with a clustered cloud, the plan-ordered
+    neighbor stream feeding ``aggregate_diff`` elides strictly more DMAs
+    under 'greedy' and 'morton' than under 'index' — the TPU twin of the
+    paper's buffer-hit-rate win, now measured on the execution path."""
+    cfg = PointNetConfig(name="clustered", n_points=256, layers=(
+        SALayerSpec(n_centers=96, n_neighbors=8, in_features=4,
+                    mlp=(4, 8, 8, 16)),
+        SALayerSpec(n_centers=32, n_neighbors=8, in_features=16,
+                    mlp=(16, 16, 16, 32)),
+    ))
+    params = pn.init_params(jax.random.PRNGKey(0), cfg, n_classes=10)
+    cloud = clustered_cloud(seed=0)
+    elided = {}
+    for sched in ORDERS:
+        m = compile_model(params, cfg, schedule=sched)
+        elided[sched["intra"]] = m.stats(cloud, window=72)["dma"]["elided"]
+    assert elided["greedy"] > elided["index"]
+    assert elided["morton"] > elided["index"]
+
+
+def test_pointer_schedule_beats_baseline_elisions():
+    """Acceptance criterion: schedule='pointer' measurably increases DMA
+    elisions over schedule='baseline'."""
+    cfg = tiny_config(n=256, c1=96, c2=32, k=8)
+    params = pn.init_params(jax.random.PRNGKey(0), cfg, n_classes=10)
+    cloud = clustered_cloud(seed=3)
+    base = compile_model(params, cfg, schedule="baseline")
+    ptr = compile_model(params, cfg, schedule="pointer")
+    e_base = base.stats(cloud, window=72)["dma"]["elided"]
+    e_ptr = ptr.stats(cloud, window=72)["dma"]["elided"]
+    assert e_ptr > e_base
+
+
+def test_planned_forward_caches_measured_stream(setup):
+    """After a planned forward, ``stats()`` with no cloud reports the DMA
+    elisions of the index stream that actually drove the gather kernel."""
+    cfg, params, cloud = setup
+    m = compile_model(params, cfg, schedule="pointer")
+    assert "dma" not in m.stats()
+    m.forward(cloud)
+    st = m.stats()
+    assert st["dma"]["steps"] == sum(
+        s.n_centers * s.n_neighbors for s in cfg.layers)
+    assert len(st["dma"]["layers"]) == cfg.n_layers
+
+
+def test_stats_counts_completed_stream_on_sparse_coverage():
+    """A coordinated plan omits lower-layer points outside every last-layer
+    receptive field; predicted stats must count the same orphan-completed
+    stream the executed gather actually runs (regression: stats used the
+    raw incomplete order and undercounted steps/DMAs)."""
+    cfg = tiny_config(n=256, c1=96, c2=4, k=4)   # c2*K < c1: orphans certain
+    params = pn.init_params(jax.random.PRNGKey(0), cfg, n_classes=10)
+    cloud = jnp.asarray(clustered_cloud(seed=2), jnp.float32)
+    m = compile_model(params, cfg, schedule="pointer")
+    total = sum(s.n_centers * s.n_neighbors for s in cfg.layers)
+    predicted = m.stats(np.asarray(cloud))["dma"]
+    assert predicted["steps"] == total
+    m.forward(cloud)
+    assert m.stats()["dma"]["steps"] == total
+
+
+def test_mode_presets_round_trip(setup):
+    cfg, params, _ = setup
+    for name, preset in MODE_PRESETS.items():
+        m = compile_model(params, cfg, schedule=name)
+        assert m.schedule == dict(preset), name
+
+
+def test_schedule_accepts_prebuilt_execution_plan(setup):
+    cfg, params, cloud = setup
+    wl = PointNetWorkload.build(np.asarray(cloud, np.float64), cfg)
+    plan = build_plan(wl, intra="greedy", coordinated=True)
+    m = compile_model(params, cfg, schedule=plan)
+    assert m.schedule == {"intra": "greedy", "coordinated": True}
+    base = compile_model(params, cfg).forward(cloud)
+    assert bool(jnp.all(m.forward(cloud) == base))
+
+
+def test_planned_schedule_rejects_jit_tracing(setup):
+    cfg, params, cloud = setup
+    m = compile_model(params, cfg, schedule="pointer")
+    with pytest.raises(TypeError, match="ExecutionPlan"):
+        jax.jit(m.forward)(cloud)
+
+
+# ---------------------------------------------------------------------------
+# stats + deprecated shims
+# ---------------------------------------------------------------------------
+
+def test_stats_reports_program_and_plan(setup):
+    cfg, params, cloud = setup
+    st = compile_model(params, cfg, backend="reram-fused").stats()
+    assert st["backend"] == "reram-fused"
+    assert st["schedule"] == {"intra": "index", "coordinated": False}
+    assert st["program_bytes"] > 0
+    assert set(st["fused_plan"]) == {"sa0", "sa1", "head"}
+    assert all(p["mode"] in ("whole", "tiled")
+               for p in st["fused_plan"].values())
+    assert compile_model(params, cfg).stats()["program_bytes"] == 0
+
+
+def test_deprecated_kwargs_warn_and_match(setup):
+    cfg, params, cloud = setup
+    prog = pn.build_model_program(params)
+    fused = compile_model(params, cfg, backend="reram-fused",
+                          program=prog).forward(cloud)
+    with pytest.warns(DeprecationWarning, match="compile_model"):
+        old = pn.forward(params, cfg, cloud, program=prog)
+    assert bool(jnp.all(old == fused))
+    mm = lambda a, w: a @ w
+    with pytest.warns(DeprecationWarning, match="DESIGN.md"):
+        old_mm = pn.batched_forward(params, cfg, jnp.stack([cloud]),
+                                    matmul=mm)
+    new_mm = compile_model(params, cfg, matmul=mm).batched_forward(
+        jnp.stack([cloud]))
+    assert bool(jnp.all(old_mm == new_mm))
+    with pytest.raises(ValueError, match="not both"):
+        pn.forward(params, cfg, cloud, matmul=mm, program=prog)
+
+
+def test_public_api_surface():
+    assert isinstance(repro.__version__, str)
+    for name in ("compile_model", "CompiledModel", "build_plan",
+                 "MODE_PRESETS", "CrossbarProgram", "ExecutionPlan",
+                 "register_backend", "available_backends"):
+        assert hasattr(repro, name), name

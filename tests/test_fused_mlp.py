@@ -368,6 +368,7 @@ def test_program_padding_and_pytree():
 # ---------------------------------------------------------------------------
 
 def test_pointnet_fused_backend_matches_per_layer():
+    from repro import compile_model
     from repro.core.workload import PointNetConfig, SALayerSpec
     from repro.models import pointnet2 as pn
     cfg = PointNetConfig(name="tiny", n_points=64, layers=(
@@ -377,33 +378,35 @@ def test_pointnet_fused_backend_matches_per_layer():
                     mlp=(16, 16, 16, 32)),
     ))
     params = pn.init_params(jax.random.PRNGKey(0), cfg, n_classes=10)
-    prog = pn.build_model_program(params)
+    model_fused = compile_model(params, cfg, backend="reram-fused")
+    model_reram = compile_model(params, cfg, backend="reram")
     cloud = jnp.asarray(np.random.default_rng(11).normal(size=(64, 3)),
                         jnp.float32)
-    fused = pn.forward(params, cfg, cloud, program=prog)
-    per_layer = pn.forward(params, cfg, cloud,
-                           matmul=lambda a, w: reram_linear(a, w))
+    fused = model_fused.forward(cloud)
+    per_layer = model_reram.forward(cloud)
     assert fused.shape == (10,)
     np.testing.assert_allclose(np.asarray(fused), np.asarray(per_layer),
                                rtol=1e-4, atol=1e-4)
     # batch-in-grid front-end over the fused pallas path: matches both the
     # single-cloud fused forward and the PR-1 style vmapped-forward path
     clouds = jnp.stack([cloud, cloud * 0.5])
-    batched = pn.batched_forward(params, cfg, clouds, program=prog)
+    batched = model_fused.batched_forward(clouds)
     assert batched.shape == (2, 10)
     np.testing.assert_allclose(np.asarray(batched[0]), np.asarray(fused),
                                rtol=1e-5, atol=1e-5)
-    vmapped = jax.vmap(
-        lambda c: pn.forward(params, cfg, c, program=prog))(clouds)
+    vmapped = jax.vmap(model_fused.forward)(clouds)
     np.testing.assert_allclose(np.asarray(batched), np.asarray(vmapped),
                                rtol=1e-5, atol=1e-5)
 
 
 def test_pointnet_batched_backend_no_outer_vmap(monkeypatch):
-    """``batched_forward(program=...)`` must dispatch every MLP through the
-    batch-in-grid kernel — one ``pallas_call`` per MLP for the whole batch
-    — and never route the batch through the unbatched kernel under vmap."""
+    """``CompiledModel.batched_forward`` on the fused backend must dispatch
+    every MLP through the batch-in-grid kernel — one ``pallas_call`` per
+    MLP for the whole batch — and never route the batch through the
+    unbatched kernel under vmap."""
+    from repro import compile_model
     from repro.core.workload import PointNetConfig, SALayerSpec
+    from repro.models import backend as backend_mod
     from repro.models import pointnet2 as pn
     cfg = PointNetConfig(name="tiny", n_points=32, layers=(
         SALayerSpec(n_centers=12, n_neighbors=4, in_features=4,
@@ -412,17 +415,18 @@ def test_pointnet_batched_backend_no_outer_vmap(monkeypatch):
                     mlp=(16, 16, 16, 32)),
     ))
     params = pn.init_params(jax.random.PRNGKey(1), cfg, n_classes=5)
-    prog = pn.build_model_program(params)
+    model = compile_model(params, cfg, backend="reram-fused")
     clouds = jnp.asarray(np.random.default_rng(13).normal(size=(3, 32, 3)),
                          jnp.float32)
     calls = []
-    real = pn.reram_mlp_fused_batched
-    monkeypatch.setattr(pn, "reram_mlp_fused_batched",
+    real = backend_mod.reram_mlp_fused_batched
+    monkeypatch.setattr(backend_mod, "reram_mlp_fused_batched",
                         lambda *a, **k: calls.append(a[0].shape) or
                         real(*a, **k))
-    monkeypatch.setattr(pn, "reram_mlp_fused", lambda *a, **k: pytest.fail(
-        "batched_forward(program=...) vmapped the unbatched kernel"))
-    out = pn.batched_forward(params, cfg, clouds, program=prog)
+    monkeypatch.setattr(backend_mod, "reram_mlp_fused",
+                        lambda *a, **k: pytest.fail(
+                            "batched_forward vmapped the unbatched kernel"))
+    out = model.batched_forward(clouds)
     assert out.shape == (3, 5)
     # one batched launch per MLP (2 SA layers + head), batch axis intact
     assert len(calls) == 3

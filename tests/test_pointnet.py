@@ -72,13 +72,13 @@ def test_batched_forward_and_loss():
 def test_reram_backend_close_to_float_forward():
     """No-accuracy-variation check end to end: the quantized crossbar MLP
     backend classifies like the float model (same argmax on most inputs)."""
-    from repro.kernels import reram_linear
+    from repro import compile_model
     cfg = PAPER_MODELS["model0"]
     params = pn.init_params(jax.random.PRNGKey(0), cfg)
     clouds, _ = next(PointCloudDataset(n_clouds=16).batches(4, 1))
-    f = pn.batched_forward(params, cfg, jnp.asarray(clouds))
-    mm = lambda a, w: reram_linear(a, w)
-    q = pn.batched_forward(params, cfg, jnp.asarray(clouds), matmul=mm)
+    f = compile_model(params, cfg).batched_forward(jnp.asarray(clouds))
+    q = compile_model(params, cfg, backend="reram").batched_forward(
+        jnp.asarray(clouds))
     assert float(jnp.mean(jnp.argmax(f, -1) == jnp.argmax(q, -1))) >= 0.75
 
 

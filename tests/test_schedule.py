@@ -116,6 +116,22 @@ def test_coordinated_trace_respects_dependencies(workload):
         done.add((layer, i))
 
 
+def test_execution_plan_frozen_and_intra_passed_through(workload):
+    """The plan is immutable and ``intra`` arrives via the constructors —
+    no post-construction mutation (the old ``intra='?'`` wart)."""
+    import dataclasses
+    from repro.core.schedule import coordinate_layers as coord
+    for intra, coordinated in (("greedy", True), ("morton", False),
+                               ("index", True)):
+        plan = build_plan(workload, intra=intra, coordinated=coordinated)
+        assert plan.intra == intra and plan.coordinated == coordinated
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        plan.intra = "index"
+    # direct constructor calls label custom last-orders as such
+    custom = coord(workload, np.arange(workload.points[2].shape[0]))
+    assert custom.intra == "custom" and custom.coordinated
+
+
 def test_layer_by_layer_trace_orders_layers(workload):
     plan = build_plan(workload, intra="index", coordinated=False)
     layers = [k for (k, _) in plan.trace]
