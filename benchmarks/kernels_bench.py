@@ -9,7 +9,6 @@ aggregation kernel under paper-vs-index orderings (the locality win).
 from __future__ import annotations
 
 import time
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -119,10 +118,42 @@ def kernels(iters=3):
         f"vmem_tiled_mb={plan_t.vmem_bytes / 2**20:.2f};"
         f"vmem_whole_mb={plan_w.vmem_bytes / 2**20:.2f};"
         f"n_tiles={plan_t.n_steps}"))
-    # compile_model dispatch overhead: CompiledModel.batched_forward vs the
-    # pre-redesign call path (pointnet2.batched_forward(program=...)), both
-    # under jit — the registry traces to the identical computation, so the
-    # ratio must be ~1.0 (dispatch is free once compiled)
+    # M-tiled dataflow on the panel-bound acceptance shape: model2 SA-1 at
+    # its REAL row count (512 centers x 16 neighbors = 8192 rows). The
+    # act-panel-in-VMEM dataflows bust the 16 MB budget here (the panel
+    # alone is 16 MB); only 'mtiled' fits — and with a single N-tile its
+    # planes stay resident, so it is weight-stationary too. The derived
+    # column records each dataflow's residency, budget verdict and
+    # plane-tile HBM crossings per layer (the stationarity metric).
+    widths3 = PAPER_MODELS["model2"].layers[0].mlp      # (16, 256, 256, 512)
+    mlp3 = [{"w": jnp.asarray(rng.normal(size=(k, n)), jnp.float32),
+             "b": jnp.asarray(rng.normal(size=(n,)), jnp.float32)}
+            for k, n in zip(widths3[:-1], widths3[1:])]
+    prog3 = build_program(mlp3)
+    m3 = (PAPER_MODELS["model2"].layers[0].n_centers
+          * PAPER_MODELS["model2"].layers[0].n_neighbors)
+    x3 = jnp.asarray(rng.normal(size=(m3, widths3[0])), jnp.float32)
+    parts, us_m = [], 0.0
+    for mode in ("whole", "tiled", "mtiled", "wstat"):
+        fp = plan_fused_mlp(prog3, m3, mode=mode,
+                            block_n=128 if mode == "tiled" else None)
+        us = _time(lambda a, md=mode, bn=fp.block_n: reram_mlp_fused(
+            a, prog3, mode=md, block_n=bn), x3, iters=1)
+        if mode == "mtiled":
+            us_m = us
+        parts.append(
+            f"{mode}_us={us:.0f};{mode}_vmem_mb={fp.vmem_bytes / 2**20:.2f};"
+            f"{mode}_fits={fp.fits_budget};"
+            f"{mode}_plane_fetches={fp.plane_tile_fetches_per_layer}")
+    auto = plan_fused_mlp(prog3, m3)
+    rows.append(row(
+        f"kernel/fused_mlp_mtiled/{m3}x{'-'.join(map(str, widths3))}", us_m,
+        f"auto_mode={auto.mode};" + ";".join(parts)))
+    # compile_model dispatch overhead: a prebuilt CompiledModel's
+    # batched_forward vs compiling inside the traced function (what a train
+    # loop differentiating through compile_model does) — both jit to the
+    # identical computation, so the ratio must be ~1.0 (dispatch and the
+    # registry are free once compiled)
     from repro.models import pointnet2 as pn
     cfg_t = PointNetConfig(name="bench-tiny", n_points=64, layers=(
         SALayerSpec(n_centers=24, n_neighbors=4, in_features=4,
@@ -135,14 +166,13 @@ def kernels(iters=3):
     model = compile_model(params, cfg_t, backend="reram-fused", program=prog)
     clouds = jnp.asarray(rng.normal(size=(4, 64, 3)), jnp.float32)
     new_fn = jax.jit(model.batched_forward)
-    with warnings.catch_warnings():        # the shim warns at trace time
-        warnings.simplefilter("ignore", DeprecationWarning)
-        old_fn = jax.jit(
-            lambda c: pn.batched_forward(params, cfg_t, c, program=prog))
-        us_new = _time(new_fn, clouds, iters=iters)
-        us_old = _time(old_fn, clouds, iters=iters)
+    retrace_fn = jax.jit(
+        lambda c: compile_model(params, cfg_t, backend="reram-fused",
+                                program=prog).batched_forward(c))
+    us_new = _time(new_fn, clouds, iters=iters)
+    us_old = _time(retrace_fn, clouds, iters=iters)
     rows.append(row(
         "api/compiled_batched_forward/4x64", us_new,
-        f"legacy_us={us_old:.3f};dispatch_overhead="
+        f"compile_in_trace_us={us_old:.3f};dispatch_overhead="
         f"{us_new / max(us_old, 1e-9):.2f}x"))
     return rows

@@ -1,17 +1,84 @@
 """repro — Pointer (ReRAM point-cloud accelerator) reproduction on JAX/Pallas.
 
-Public API surface (``import repro``):
+The public API surface, by example. Everything below executes under
+``PYTHONPATH=src python -m pytest --doctest-modules src/repro/__init__.py``
+(CI's ``docs`` job runs it on every push, next to the README quickstart).
 
-  compile_model / CompiledModel : the single entry point for running
-      PointNet++ on any registered backend ('float', 'reram',
-      'reram-fused') under any schedule (``repro.models.backend``)
-  register_backend / available_backends : extend the backend registry
-  build_plan / MODE_PRESETS / ExecutionPlan : paper Algorithm 1 scheduling
-  CrossbarProgram : weight-stationary crossbar program (program-once)
-  PAPER_MODELS / PointNetConfig / PointNetWorkload : Table-1 workloads
+Set up a tiny PointNet++ the examples can share:
+
+>>> import jax, jax.numpy as jnp, numpy as np
+>>> import repro
+>>> from repro.core.workload import PointNetConfig, SALayerSpec
+>>> from repro.models.pointnet2 import init_params
+>>> cfg = PointNetConfig(name="tiny", n_points=64, layers=(
+...     SALayerSpec(n_centers=24, n_neighbors=4, in_features=4,
+...                 mlp=(4, 8, 8, 16)),
+...     SALayerSpec(n_centers=8, n_neighbors=4, in_features=16,
+...                 mlp=(16, 16, 16, 32))))
+>>> params = init_params(jax.random.PRNGKey(0), cfg, n_classes=10)
+>>> cloud = jnp.asarray(
+...     np.random.default_rng(0).normal(size=(64, 3)), jnp.float32)
+
+**compile_model / CompiledModel** — the single entry point
+(``repro.models.backend``): resolve a backend from the registry, run its
+one-time programming work, bind a schedule, execute. The three paper
+Table-1 workloads ship as ``PAPER_MODELS`` (keys ``'model0'``/``'1'``/
+``'2'``); ``available_backends`` lists the registry:
+
+>>> model = repro.compile_model(params, cfg, backend="reram-fused")
+>>> model.forward(cloud).shape            # (n_classes,) logits
+(10,)
+>>> model.backend_name
+'reram-fused'
+>>> sorted(repro.PAPER_MODELS)
+['model0', 'model1', 'model2']
+>>> [b for b in repro.available_backends() if b.startswith("reram")]
+['reram', 'reram-fused', 'reram-fused-mtiled', 'reram-fused-wstat']
+
+``CompiledModel.stats()`` reports the fused dataflow planned per MLP
+(DESIGN.md §3.3: 'whole' / 'tiled' / 'mtiled' / 'wstat') with its VMEM
+residency and plane-tile HBM crossings; the dataflow-pinning registry
+entries force one:
+
+>>> st = repro.compile_model(params, cfg,
+...                          backend="reram-fused-mtiled").stats()
+>>> sorted(st["fused_plan"])
+['head', 'sa0', 'sa1']
+>>> {p["mode"] for p in st["fused_plan"].values()}
+{'mtiled'}
+
+**MODE_PRESETS / build_plan / ExecutionPlan** — paper Algorithm 1
+scheduling (``repro.core.schedule``). Preset names round-trip through
+``compile_model(schedule=...)`` and drive both the simulator and the
+execution gather order (bitwise-invariant logits, fewer DMAs):
+
+>>> sorted(repro.MODE_PRESETS)
+['baseline', 'pointer', 'pointer-1', 'pointer-12', 'pointer-morton']
+>>> repro.compile_model(params, cfg, schedule="pointer").schedule \\
+...     == {"intra": "greedy", "coordinated": True}
+True
+>>> wl = repro.PointNetWorkload.build(np.asarray(cloud, np.float64), cfg)
+>>> plan = repro.build_plan(wl, **repro.MODE_PRESETS["pointer"])
+>>> plan.intra
+'greedy'
+>>> np.asarray(plan.order_of(2)).shape    # layer-2 execution order
+(8,)
+
+**CrossbarProgram** — the weight-stationary lifecycle
+(``repro.kernels.program``): every MLP quantized + 2-bit-plane-encoded
+exactly once at "program time", VMEM-ready and resident thereafter; the
+fused kernels only stream activations through it:
+
+>>> from repro.kernels import build_program, reram_mlp_fused
+>>> prog = build_program([{"w": jnp.ones((4, 8)), "b": jnp.zeros((8,))}])
+>>> prog.widths, prog.d_pad, prog.n_planes
+((4, 8), 128, 4)
+>>> reram_mlp_fused(jnp.ones((2, 4)), prog, final_relu=False).shape
+(2, 8)
 
 Everything else stays importable from its submodule (``repro.core``,
-``repro.kernels``, ``repro.models``, ...).
+``repro.kernels``, ``repro.models``, ...); see README.md for the
+backend table and the paper-section → module map.
 """
 from repro.core.schedule import ExecutionPlan, MODE_PRESETS, build_plan
 from repro.core.workload import (PAPER_MODELS, PointNetConfig,
@@ -20,7 +87,7 @@ from repro.kernels import CrossbarProgram
 from repro.models.backend import (Backend, CompiledModel, available_backends,
                                   compile_model, register_backend)
 
-__version__ = "0.3.0"
+__version__ = "0.4.0"
 
 __all__ = [
     "Backend",

@@ -4,53 +4,68 @@ The paper's inter-layer coordination keeps intermediate results on-chip
 instead of round-tripping to DRAM. Applied *inside* feature computation,
 the TPU twin is: run an entire SA-layer MLP (matmul -> bias+ReLU ->
 matmul -> bias+ReLU -> matmul) in ONE ``pallas_call``, with inter-layer
-activations living in a VMEM scratch buffer — 1 kernel launch instead of
-3, zero HBM round-trips between stages.
+activations living on-chip — 1 kernel launch instead of 3.
 
-Grid is ``(B, L, M/bm, N/bn)``, iterated with the batch element
-outermost and the N-tile innermost (row-major): batch element ``b`` runs
-its full L-layer pipeline before ``b+1`` starts, layer ``l`` streams
-every activation stripe and every N-tile through layer ``l``'s
-VMEM-staged plane tile (weight-stationary) before layer ``l+1`` starts.
-Only a ``(P, d, bn)`` plane tile is VMEM-resident per grid step — not
-the whole ``(P, d, d)`` layer — so programs whose padded layer exceeds
-the 16 MB VMEM budget (model2's d_pad=1024 layer 2) run tiled; a K-loop
-inside the kernel bounds each MXU op to ``(bm, bk) @ (bk, bn)``.
-``plan_fused_mlp`` (program.py) picks whole-layer (``bn = d``, the PR-1
-dataflow, a special case of this grid) vs tiled automatically from the
-per-grid-step VMEM residency.
+Four dataflows share one integer pipeline (``FUSED_MODES`` in
+program.py; ``plan_fused_mlp`` auto-selects under the 16 MB VMEM budget):
 
-Two orderings make N-tiling exact:
+- ``whole``/``tiled`` — grid ``(B, L, M/bm, N/bn)``, batch outermost,
+  N-tile innermost. The inter-layer activation panel ``(M_pad, d)`` is a
+  VMEM scratch; only a ``(P, d, bn)`` plane tile is staged per grid step
+  and an in-kernel K-loop bounds each MXU op to ``(bm, bk) @ (bk, bn)``.
+  ``whole`` is the single-N-tile special case (``bn = d``): the plane
+  block index is constant within a layer, so the planes stay VMEM-
+  resident across stripes — fully weight-stationary. With ``bn < d``
+  ('tiled') the plane block index changes every step and tiles re-stream
+  from HBM once per M-stripe.
+- ``mtiled`` — same grid order, but the activation panel lives in HBM:
+  the kernel's own *output buffer* doubles as the panel (ANY memory
+  space) and one ``(bm, d)`` f32 stripe is staged in VMEM by explicit
+  ``make_async_copy`` DMA — fetched at each stripe's first N-tile,
+  flushed at its last. Per-step residency stops growing with M, so
+  panel-bound programs (model2 SA-1 at its real 8192 rows) run fused;
+  the price is one f32 stripe read + write through HBM per layer.
+- ``wstat`` — grid ``(B, L, N/bn, M/bm)``: N-tile *outermost*, so each
+  plane tile crosses HBM once per layer (true weight re-streaming
+  stationarity) no matter how many stripes pass through it. Layer
+  inputs come from a full ``(M_pad, d)`` *int8* snapshot panel written
+  at each stripe's first visit (quantized values fit int8), which is
+  what makes the j-outer order exact: N-tile ``j`` must not re-read
+  activation columns tile ``j-1`` already overwrote.
 
-- *Input snapshot*: layer ``l`` both reads stripe ``i`` of the VMEM
-  activation panel (as its input) and writes it (as its output). With
-  ``bn < d`` the first N-tile's write would clobber columns later
-  N-tiles still need to read, so at ``j == 0`` the requantized input
-  stripe is snapshotted into an int32 VMEM scratch that all N-tiles of
-  ``(l, i)`` consume.
+Three orderings make every tiling exact:
+
+- *Input snapshot*: layer ``l`` both reads stripe ``i`` of the
+  activation panel (as its input) and writes it (as its output). At each
+  stripe's first N-tile the requantized input is snapshotted (int32
+  scratch for the i-outer modes, the int8 panel for 'wstat') so later
+  N-tiles never see half-overwritten rows.
 - *Scale finalization*: the running max over layer ``l``'s masked
-  outputs (SMEM scratch) accumulates over every ``(i, j)`` tile and
-  finalizes into the *global per-tensor* activation scale at layer
-  ``l+1``'s first tile — max is order-free, so the scale equals the
-  whole-layer and sequential ``reram_linear`` values bitwise.
+  outputs (SMEM scratch) accumulates over every tile and finalizes into
+  the *global per-tensor* activation scale at layer ``l+1``'s first tile
+  — max is order-free, so the scale equals the whole-layer and
+  sequential ``reram_linear`` values bitwise in every mode.
+- *f32 round-trip* ('mtiled'): activations cross HBM as f32 stripes —
+  stored and re-read exactly — so spilling the panel does not perturb a
+  single bit vs the VMEM-panel modes.
 
 The batch dimension lives in the grid, not in an outer vmap:
 ``reram_mlp_fused_batched`` quantizes each batch element separately
 (per-element input scale, per-element SMEM running max — reset at each
 element's first tile) so one ``pallas_call`` reproduces the vmapped
-semantics of PR 1 exactly. ``reram_mlp_fused`` is the B=1 special case
-that flattens all leading axes into rows under one shared scale.
+semantics exactly. ``reram_mlp_fused`` is the B=1 special case that
+flattens all leading axes into rows under one shared scale.
 
 Numerics contract (asserted in ``tests/test_fused_mlp.py``): the integer
 crossbar pipeline — quantize, plane shift-and-add, offset-binary
-correction, requantize — is *exact* and invariant to the N/K tiling
-(int32 accumulation is associative). With zero biases the kernel matches
-the correctly-rounded NumPy oracle of the quantized chain BITWISE on
-arbitrary float inputs at any tile edge; with biases the dequant
-multiply-add may be FMA-contracted by XLA, so fused vs the
-separately-compiled per-layer path agree to ~1 ulp (the per-layer path
-itself deviates from the NumPy oracle by the same margin) — at most 1
-quant LSB after requantization, and zero integer drift.
+correction, requantize — is *exact* and invariant to the M/N/K tiling
+and to the loop order (int32 accumulation is associative, max is
+order-free). With zero biases every mode matches the correctly-rounded
+NumPy oracle of the quantized chain BITWISE on arbitrary float inputs at
+any tile edge; with biases the dequant multiply-add may be
+FMA-contracted by XLA, so fused vs the separately-compiled per-layer
+path agree to ~1 ulp — at most 1 quant LSB after requantization, and
+zero integer drift. All four modes are bitwise-identical to each other.
 
 All layers are padded to the program's uniform ``d_pad`` edge. Padded
 *columns* of the planes encode cell value 0 (which decodes to weight
@@ -76,6 +91,66 @@ __all__ = ["reram_mlp_fused", "reram_mlp_fused_batched"]
 DEFAULT_BLOCK_M = 128   # activation stripe height (crossbar geometry)
 
 
+def _plane_matmul(x_int, planes_ref, row_sums, *, n_planes: int,
+                  cell_bits: int, weight_bits: int, block_k: int):
+    """Bit-sliced crossbar matmul on one ``(bm, d) @ (d, bn)`` tile:
+    shift-and-add over the 2-bit cell planes with a K-loop bounding each
+    MXU op to ``(bm, bk) @ (bk, bn)``, then the offset-binary correction
+    from the pre-reduced input row sums."""
+    bm, d = x_int.shape
+    bn = planes_ref.shape[-1]
+    acc = jnp.zeros((bm, bn), jnp.int32)
+    for p in range(n_planes):
+        part = jnp.zeros((bm, bn), jnp.int32)
+        for k0 in range(0, d, block_k):
+            w = planes_ref[0, p, k0:k0 + block_k, :].astype(jnp.int32)
+            part = part + jax.lax.dot_general(
+                x_int[:, k0:k0 + block_k], w, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+        acc = acc + (part << (cell_bits * p))
+    return acc - (row_sums << (weight_bits - 1))
+
+
+def _dequant_tile(y_int, s, sw_ref, bias_ref, mask_ref, l, i, *,
+                  n_layers: int, block_m: int, m_real: int,
+                  final_relu: bool):
+    """Dequantize + bias + ReLU (the inter-layer stage that used to
+    round-trip through HBM), then zero the padded rows/columns exactly as
+    the sequential path's slice-to-real-shape does — col_mask at tile
+    granularity handles real widths that end mid-tile."""
+    y = y_int.astype(jnp.float32) * (s * sw_ref[0, 0]) + bias_ref[...]
+    do_relu = jnp.logical_or(l < n_layers - 1, final_relu)
+    y = jnp.where(do_relu, jnp.maximum(y, 0.0), y)
+    y = y * mask_ref[...]
+    row_ids = i * block_m + jax.lax.broadcasted_iota(
+        jnp.int32, (block_m, 1), 0)
+    return jnp.where(row_ids < m_real, y, 0.0)
+
+
+def _finalize_layer_scale(s_ref, mx_ref, sx0_ref, l, qmax: float):
+    """At each (batch element, layer)'s first tile: finalize this layer's
+    global input scale — the element's external quant scale for layer 0,
+    else max|prev layer output| / qmax (``quantize_tensor`` semantics) —
+    and zero the running max that accumulates the NEXT layer's scale."""
+    s_ref[0] = jnp.where(
+        l == 0, sx0_ref[0, 0],
+        jnp.maximum(mx_ref[0] / qmax, 1e-12))
+    mx_ref[0] = jnp.float32(0)
+
+
+def _requant_stripe(act_stripe, x0_ref, s, l, qmax: float):
+    """Requantize one f32 activation stripe ONCE per (layer, stripe):
+    later N-tiles must not re-read rows whose low columns the first
+    N-tile already overwrote with this layer's outputs. Layer 0 takes
+    the pre-quantized ints instead."""
+    x_q = jnp.clip(jnp.round(act_stripe / s), -qmax, qmax).astype(jnp.int32)
+    return jnp.where(l == 0, x0_ref[0].astype(jnp.int32), x_q)
+
+
+# ---------------------------------------------------------------------------
+# whole / tiled: VMEM activation panel, grid (B, L, M/bm, N/bn)
+# ---------------------------------------------------------------------------
+
 def _kernel(x0_ref, planes_ref, bias_ref, sw_ref, sx0_ref, mask_ref,
             o_ref, act_ref, xq_ref, xs_ref, s_ref, mx_ref, *,
             n_layers: int, n_planes: int, cell_bits: int, weight_bits: int,
@@ -87,58 +162,27 @@ def _kernel(x0_ref, planes_ref, bias_ref, sw_ref, sx0_ref, mask_ref,
 
     @pl.when(jnp.logical_and(i == 0, j == 0))
     def _start_layer():
-        # finalize this layer's global input scale: this batch element's
-        # external quant scale for layer 0, else max|prev layer output| /
-        # qmax (quantize_tensor semantics)
-        s_ref[0] = jnp.where(
-            l == 0, sx0_ref[0, 0],
-            jnp.maximum(mx_ref[0] / qmax, 1e-12))
-        mx_ref[0] = jnp.float32(0)  # start accumulating the next layer's max
+        _finalize_layer_scale(s_ref, mx_ref, sx0_ref, l, qmax)
 
     s = s_ref[0]
     rows = pl.ds(i * block_m, block_m)
 
     @pl.when(j == 0)
     def _snapshot_input():
-        # requantize this stripe's input ONCE per (l, i): later N-tiles must
-        # not re-read act rows whose low columns tile j=0 already overwrote
-        # with this layer's outputs. Layer 0 takes the pre-quantized ints.
-        # The offset-correction row sums only depend on (l, i) too, so they
-        # are reduced here once instead of per N-tile.
-        x_q = jnp.clip(jnp.round(act_ref[rows, :] / s), -qmax, qmax
-                       ).astype(jnp.int32)
-        x_new = jnp.where(l == 0, x0_ref[0].astype(jnp.int32), x_q)
+        # the offset-correction row sums only depend on (l, i) too, so they
+        # are reduced here once instead of per N-tile
+        x_new = _requant_stripe(act_ref[rows, :], x0_ref, s, l, qmax)
         xq_ref[...] = x_new
         xs_ref[...] = jnp.sum(x_new, axis=1, keepdims=True)
 
     x_int = xq_ref[...]
-    d = x_int.shape[-1]
     bn = planes_ref.shape[-1]
-
-    # bit-sliced crossbar matmul: shift-and-add over the 2-bit cell planes,
-    # K-loop bounding each MXU op to (block_m, block_k) @ (block_k, bn)
-    acc = jnp.zeros((block_m, bn), jnp.int32)
-    for p in range(n_planes):
-        part = jnp.zeros((block_m, bn), jnp.int32)
-        for k0 in range(0, d, block_k):
-            w = planes_ref[0, p, k0:k0 + block_k, :].astype(jnp.int32)
-            part = part + jax.lax.dot_general(
-                x_int[:, k0:k0 + block_k], w, (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.int32)
-        acc = acc + (part << (cell_bits * p))
-    y_int = acc - (xs_ref[...] << (weight_bits - 1))   # offset-binary corr.
-
-    # dequantize + bias + ReLU (the inter-layer stage that used to round-trip
-    # through HBM), then zero the padded rows/columns exactly as the
-    # sequential path's slice-to-real-shape does — col_mask at tile
-    # granularity handles real widths that end mid-tile
-    y = y_int.astype(jnp.float32) * (s * sw_ref[0, 0]) + bias_ref[...]
-    do_relu = jnp.logical_or(l < n_layers - 1, final_relu)
-    y = jnp.where(do_relu, jnp.maximum(y, 0.0), y)
-    y = y * mask_ref[...]
-    row_ids = i * block_m + jax.lax.broadcasted_iota(
-        jnp.int32, (block_m, 1), 0)
-    y = jnp.where(row_ids < m_real, y, 0.0)
+    y_int = _plane_matmul(x_int, planes_ref, xs_ref[...],
+                          n_planes=n_planes, cell_bits=cell_bits,
+                          weight_bits=weight_bits, block_k=block_k)
+    y = _dequant_tile(y_int, s, sw_ref, bias_ref, mask_ref, l, i,
+                      n_layers=n_layers, block_m=block_m, m_real=m_real,
+                      final_relu=final_relu)
 
     mx_ref[0] = jnp.maximum(mx_ref[0], jnp.max(jnp.abs(y)))
     act_ref[rows, pl.ds(j * bn, bn)] = y        # stays in VMEM for layer l+1
@@ -148,23 +192,202 @@ def _kernel(x0_ref, planes_ref, bias_ref, sw_ref, sx0_ref, mask_ref,
         o_ref[0] = y
 
 
-def _launch(x_p, sx, program: CrossbarProgram, *, m_real: int,
+# ---------------------------------------------------------------------------
+# mtiled: HBM activation panel (the output buffer), stripe staged by DMA,
+# grid (B, L, M/bm, N/bn)
+# ---------------------------------------------------------------------------
+
+def _kernel_mtiled(x0_ref, planes_ref, bias_ref, sw_ref, sx0_ref, mask_ref,
+                   o_ref, stripe_ref, xq_ref, xs_ref, s_ref, mx_ref, sem_ref,
+                   *, n_layers: int, n_planes: int, cell_bits: int,
+                   weight_bits: int, block_m: int, block_k: int, m_real: int,
+                   final_relu: bool):
+    b = pl.program_id(0)
+    l = pl.program_id(1)
+    i = pl.program_id(2)            # activation stripe
+    j = pl.program_id(3)            # output N-tile (innermost)
+    n_steps = pl.num_programs(3)
+    qmax = float(2 ** (weight_bits - 1) - 1)
+    rows = pl.ds(i * block_m, block_m)
+
+    @pl.when(jnp.logical_and(i == 0, j == 0))
+    def _start_layer():
+        _finalize_layer_scale(s_ref, mx_ref, sx0_ref, l, qmax)
+
+    s = s_ref[0]
+
+    @pl.when(j == 0)
+    def _stage_stripe():
+        # DMA this stripe of the HBM activation panel into VMEM (the output
+        # buffer IS the panel) and requantize it once per (l, i). Layer 0
+        # reads the pre-quantized x0 block instead, so its panel fetch is
+        # skipped — no wasted HBM traffic before the panel holds anything.
+        @pl.when(l > 0)
+        def _fetch():
+            cin = pltpu.make_async_copy(o_ref.at[b, rows, :], stripe_ref,
+                                        sem_ref)
+            cin.start()
+            cin.wait()
+        x_new = _requant_stripe(stripe_ref[...], x0_ref, s, l, qmax)
+        xq_ref[...] = x_new
+        xs_ref[...] = jnp.sum(x_new, axis=1, keepdims=True)
+
+    x_int = xq_ref[...]
+    bn = planes_ref.shape[-1]
+    y_int = _plane_matmul(x_int, planes_ref, xs_ref[...],
+                          n_planes=n_planes, cell_bits=cell_bits,
+                          weight_bits=weight_bits, block_k=block_k)
+    y = _dequant_tile(y_int, s, sw_ref, bias_ref, mask_ref, l, i,
+                      n_layers=n_layers, block_m=block_m, m_real=m_real,
+                      final_relu=final_relu)
+
+    mx_ref[0] = jnp.maximum(mx_ref[0], jnp.max(jnp.abs(y)))
+    # the int32 snapshot already decoupled reads from writes, so the f32
+    # stripe buffer is dead after _stage_stripe and collects the outputs
+    stripe_ref[:, pl.ds(j * bn, bn)] = y
+
+    @pl.when(j == n_steps - 1)
+    def _flush_stripe():                        # stripe complete: DMA back
+        cout = pltpu.make_async_copy(stripe_ref, o_ref.at[b, rows, :],
+                                     sem_ref)
+        cout.start()
+        cout.wait()
+
+
+# ---------------------------------------------------------------------------
+# wstat: j-outer weight re-streaming over an int8 snapshot panel,
+# grid (B, L, N/bn, M/bm)
+# ---------------------------------------------------------------------------
+
+def _kernel_wstat(x0_ref, planes_ref, bias_ref, sw_ref, sx0_ref, mask_ref,
+                  o_ref, act_ref, xq_ref, xs_ref, s_ref, mx_ref, *,
+                  n_layers: int, n_planes: int, cell_bits: int,
+                  weight_bits: int, block_m: int, block_k: int, m_real: int,
+                  final_relu: bool):
+    l = pl.program_id(1)
+    j = pl.program_id(2)            # output N-tile (OUTERMOST of the sweep)
+    i = pl.program_id(3)            # activation stripe (innermost)
+    qmax = float(2 ** (weight_bits - 1) - 1)
+    rows = pl.ds(i * block_m, block_m)
+
+    @pl.when(jnp.logical_and(j == 0, i == 0))
+    def _start_layer():
+        _finalize_layer_scale(s_ref, mx_ref, sx0_ref, l, qmax)
+
+    s = s_ref[0]
+
+    @pl.when(j == 0)
+    def _snapshot_stripe():
+        # first N-tile of the layer snapshots every stripe it visits into
+        # the int8 panel; later N-tiles (different plane tile, same rows)
+        # read the panel, never the half-overwritten activations
+        x_new = _requant_stripe(act_ref[rows, :], x0_ref, s, l, qmax)
+        xq_ref[rows, :] = x_new.astype(jnp.int8)
+        xs_ref[rows, :] = jnp.sum(x_new, axis=1, keepdims=True)
+
+    x_int = xq_ref[rows, :].astype(jnp.int32)
+    bn = planes_ref.shape[-1]
+    y_int = _plane_matmul(x_int, planes_ref, xs_ref[rows, :],
+                          n_planes=n_planes, cell_bits=cell_bits,
+                          weight_bits=weight_bits, block_k=block_k)
+    y = _dequant_tile(y_int, s, sw_ref, bias_ref, mask_ref, l, i,
+                      n_layers=n_layers, block_m=block_m, m_real=m_real,
+                      final_relu=final_relu)
+
+    mx_ref[0] = jnp.maximum(mx_ref[0], jnp.max(jnp.abs(y)))
+    act_ref[rows, pl.ds(j * bn, bn)] = y
+
+    @pl.when(l == n_layers - 1)
+    def _store():
+        o_ref[0] = y
+
+
+# ---------------------------------------------------------------------------
+# launch
+# ---------------------------------------------------------------------------
+
+def _launch(x_p, sx, program: CrossbarProgram, *, mode: str, m_real: int,
             final_relu: bool, block_m: int, block_n: int, block_k: int,
             interpret: bool):
     """One ``pallas_call`` over pre-quantized ``(B, m_pad, d)`` int8 rows
-    with per-batch-element scales ``sx`` of shape ``(B, 1)``."""
+    with per-batch-element scales ``sx`` of shape ``(B, 1)``, under the
+    ``mode`` dataflow (see module docstring)."""
     b, m_pad, d = x_p.shape
     m_steps = m_pad // block_m
     n_steps = d // block_n
     n_layers, n_planes = program.n_layers, program.n_planes
 
-    kernel = functools.partial(
-        _kernel, n_layers=n_layers, n_planes=n_planes,
-        cell_bits=program.cell_bits, weight_bits=program.weight_bits,
-        block_m=block_m, block_k=block_k, m_real=m_real,
-        final_relu=final_relu)
+    common = dict(n_layers=n_layers, n_planes=n_planes,
+                  cell_bits=program.cell_bits,
+                  weight_bits=program.weight_bits,
+                  block_m=block_m, block_k=block_k, m_real=m_real,
+                  final_relu=final_relu)
+    operands = (x_p, program.planes, program.bias, program.w_scale, sx,
+                program.col_mask)
+    out_shape = jax.ShapeDtypeStruct((b, m_pad, d), jnp.float32)
+
+    if mode == "wstat":
+        return pl.pallas_call(
+            functools.partial(_kernel_wstat, **common),
+            grid=(b, n_layers, n_steps, m_steps),
+            in_specs=[
+                pl.BlockSpec((1, block_m, d),
+                             lambda bb, l, j, i: (bb, i, 0)),
+                pl.BlockSpec((1, n_planes, d, block_n),
+                             lambda bb, l, j, i: (l, 0, 0, j)),
+                pl.BlockSpec((1, block_n), lambda bb, l, j, i: (l, j)),
+                pl.BlockSpec((1, 1), lambda bb, l, j, i: (l, 0),
+                             memory_space=pltpu.SMEM),
+                pl.BlockSpec((1, 1), lambda bb, l, j, i: (bb, 0),
+                             memory_space=pltpu.SMEM),
+                pl.BlockSpec((1, block_n), lambda bb, l, j, i: (l, j)),
+            ],
+            out_specs=pl.BlockSpec((1, block_m, block_n),
+                                   lambda bb, l, j, i: (bb, i, j)),
+            out_shape=out_shape,
+            scratch_shapes=[
+                pltpu.VMEM((m_pad, d), jnp.float32),  # activation panel
+                pltpu.VMEM((m_pad, d), jnp.int8),     # input-snapshot panel
+                pltpu.VMEM((m_pad, 1), jnp.int32),    # panel row sums
+                pltpu.SMEM((1,), jnp.float32),        # current layer scale
+                pltpu.SMEM((1,), jnp.float32),        # running max|output|
+            ],
+            interpret=interpret,
+        )(*operands)
+
+    if mode == "mtiled":
+        return pl.pallas_call(
+            functools.partial(_kernel_mtiled, **common),
+            grid=(b, n_layers, m_steps, n_steps),
+            in_specs=[
+                pl.BlockSpec((1, block_m, d),
+                             lambda bb, l, i, j: (bb, i, 0)),
+                pl.BlockSpec((1, n_planes, d, block_n),
+                             lambda bb, l, i, j: (l, 0, 0, j)),
+                pl.BlockSpec((1, block_n), lambda bb, l, i, j: (l, j)),
+                pl.BlockSpec((1, 1), lambda bb, l, i, j: (l, 0),
+                             memory_space=pltpu.SMEM),
+                pl.BlockSpec((1, 1), lambda bb, l, i, j: (bb, 0),
+                             memory_space=pltpu.SMEM),
+                pl.BlockSpec((1, block_n), lambda bb, l, i, j: (l, j)),
+            ],
+            # the output stays in HBM and doubles as the activation panel;
+            # the kernel DMAs stripes in/out itself
+            out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+            out_shape=out_shape,
+            scratch_shapes=[
+                pltpu.VMEM((block_m, d), jnp.float32),  # DMA-staged stripe
+                pltpu.VMEM((block_m, d), jnp.int32),    # stripe snapshot
+                pltpu.VMEM((block_m, 1), jnp.int32),    # stripe row sums
+                pltpu.SMEM((1,), jnp.float32),          # current layer scale
+                pltpu.SMEM((1,), jnp.float32),          # running max|output|
+                pltpu.SemaphoreType.DMA,                # stripe DMA sem
+            ],
+            interpret=interpret,
+        )(*operands)
+
     return pl.pallas_call(
-        kernel,
+        functools.partial(_kernel, **common),
         grid=(b, n_layers, m_steps, n_steps),
         in_specs=[
             pl.BlockSpec((1, block_m, d), lambda bb, l, i, j: (bb, i, 0)),
@@ -179,7 +402,7 @@ def _launch(x_p, sx, program: CrossbarProgram, *, m_real: int,
         ],
         out_specs=pl.BlockSpec((1, block_m, block_n),
                                lambda bb, l, i, j: (bb, i, j)),
-        out_shape=jax.ShapeDtypeStruct((b, m_pad, d), jnp.float32),
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((m_pad, d), jnp.float32),   # inter-layer activations
             pltpu.VMEM((block_m, d), jnp.int32),   # input-stripe snapshot
@@ -188,8 +411,7 @@ def _launch(x_p, sx, program: CrossbarProgram, *, m_real: int,
             pltpu.SMEM((1,), jnp.float32),         # running max|output|
         ],
         interpret=interpret,
-    )(x_p, program.planes, program.bias, program.w_scale, sx,
-      program.col_mask)
+    )(*operands)
 
 
 def _check_bits(program: CrossbarProgram):
@@ -200,11 +422,12 @@ def _check_bits(program: CrossbarProgram):
             f"would overflow them")
 
 
-@functools.partial(jax.jit, static_argnames=("final_relu", "block_m",
+@functools.partial(jax.jit, static_argnames=("final_relu", "mode", "block_m",
                                              "block_n", "block_k",
                                              "interpret"))
 def reram_mlp_fused(x: jnp.ndarray, program: CrossbarProgram, *,
                     final_relu: bool = True,
+                    mode: str | None = None,
                     block_m: int = DEFAULT_BLOCK_M,
                     block_n: int | None = None,
                     block_k: int | None = None,
@@ -213,7 +436,8 @@ def reram_mlp_fused(x: jnp.ndarray, program: CrossbarProgram, *,
     in a single ``pallas_call``. Same quantization scales and exact same
     integer arithmetic as chaining ``reram_linear`` + bias + ReLU per layer
     (float dequant agrees to FMA-contraction ulps — see module docstring),
-    with zero weight encoding in the hot path. ``block_n``/``block_k``
+    with zero weight encoding in the hot path. ``mode`` picks the dataflow
+    ('whole' / 'tiled' / 'mtiled' / 'wstat'); it and ``block_n``/``block_k``
     default to ``plan_fused_mlp``'s VMEM-budget auto-selection."""
     _check_bits(program)
     widths = program.widths
@@ -223,22 +447,23 @@ def reram_mlp_fused(x: jnp.ndarray, program: CrossbarProgram, *,
     m0 = x2.shape[0]
     x_int, sx = quantize_tensor(x2, bits=program.weight_bits)
 
-    plan = plan_fused_mlp(program, m0, block_m=block_m, block_n=block_n,
-                          block_k=block_k)
+    plan = plan_fused_mlp(program, m0, mode=mode, block_m=block_m,
+                          block_n=block_n, block_k=block_k)
     x_p = jnp.zeros((1, plan.m_pad, d), jnp.int8).at[0, :m0, :widths[0]].set(
         x_int.astype(jnp.int8))
     out = _launch(x_p, sx.reshape(1, 1).astype(jnp.float32), program,
-                  m_real=m0, final_relu=final_relu, block_m=plan.block_m,
-                  block_n=plan.block_n, block_k=plan.block_k,
-                  interpret=interpret)
+                  mode=plan.mode, m_real=m0, final_relu=final_relu,
+                  block_m=plan.block_m, block_n=plan.block_n,
+                  block_k=plan.block_k, interpret=interpret)
     return out[0, :m0, :widths[-1]].reshape(*lead, widths[-1])
 
 
-@functools.partial(jax.jit, static_argnames=("final_relu", "block_m",
+@functools.partial(jax.jit, static_argnames=("final_relu", "mode", "block_m",
                                              "block_n", "block_k",
                                              "interpret"))
 def reram_mlp_fused_batched(x: jnp.ndarray, program: CrossbarProgram, *,
                             final_relu: bool = True,
+                            mode: str | None = None,
                             block_m: int = DEFAULT_BLOCK_M,
                             block_n: int | None = None,
                             block_k: int | None = None,
@@ -248,7 +473,8 @@ def reram_mlp_fused_batched(x: jnp.ndarray, program: CrossbarProgram, *,
     vmap. Each batch element keeps its own input quantization scale and
     its own inter-layer running-max scales (reset at its first grid
     step), so the result matches ``vmap(reram_mlp_fused)`` — bitwise on
-    the integer pipeline, ~1 ulp on the float dequant."""
+    the integer pipeline, ~1 ulp on the float dequant. Accepts the same
+    ``mode``/tile overrides as :func:`reram_mlp_fused`."""
     _check_bits(program)
     widths = program.widths
     d = program.d_pad
@@ -259,12 +485,12 @@ def reram_mlp_fused_batched(x: jnp.ndarray, program: CrossbarProgram, *,
     x_int, sx = jax.vmap(
         lambda xb: quantize_tensor(xb, bits=program.weight_bits))(x2)
 
-    plan = plan_fused_mlp(program, m0, block_m=block_m, block_n=block_n,
-                          block_k=block_k)
+    plan = plan_fused_mlp(program, m0, mode=mode, block_m=block_m,
+                          block_n=block_n, block_k=block_k)
     x_p = jnp.zeros((batch, plan.m_pad, d), jnp.int8
                     ).at[:, :m0, :widths[0]].set(x_int.astype(jnp.int8))
     out = _launch(x_p, sx.reshape(batch, 1).astype(jnp.float32), program,
-                  m_real=m0, final_relu=final_relu, block_m=plan.block_m,
-                  block_n=plan.block_n, block_k=plan.block_k,
-                  interpret=interpret)
+                  mode=plan.mode, m_real=m0, final_relu=final_relu,
+                  block_m=plan.block_m, block_n=plan.block_n,
+                  block_k=plan.block_k, interpret=interpret)
     return out[:, :m0, :widths[-1]].reshape(batch, *lead, widths[-1])

@@ -24,8 +24,8 @@ import jax.numpy as jnp
 from .ref import combine_planes
 
 __all__ = [
-    "CrossbarProgram", "FusedPlan", "build_program", "encode_planes",
-    "fused_vmem_bytes", "plan_fused_mlp", "quantize_tensor",
+    "CrossbarProgram", "FUSED_MODES", "FusedPlan", "build_program",
+    "encode_planes", "fused_vmem_bytes", "plan_fused_mlp", "quantize_tensor",
 ]
 
 #: Crossbar / MXU tile edge — every program dimension is padded to this.
@@ -33,6 +33,22 @@ CROSSBAR = 128
 
 #: Per-core VMEM the fused kernel is budgeted against (TPU: ~16 MB/core).
 VMEM_BUDGET_BYTES = 16 * 2 ** 20
+
+#: The four fused-kernel dataflows (DESIGN.md §3.3):
+#:   whole  — single N-tile (bn = d_pad), activation panel in VMEM; fully
+#:            weight-stationary, the PR-1 dataflow.
+#:   tiled  — N/K-tiled plane staging, activation panel in VMEM; plane
+#:            tiles re-stream from HBM once per M-stripe (j innermost).
+#:   mtiled — M-tiled activation panel: the panel lives in HBM (the output
+#:            buffer doubles as it) and only one (block_m, d_pad) stripe is
+#:            VMEM-resident per step, staged by explicit DMA. The only mode
+#:            whose residency does not grow with M — panel-bound shapes
+#:            (model2 SA-1 at 8192 rows) run fused through it.
+#:   wstat  — j-outer weight re-streaming: N-tiles iterate outermost over a
+#:            full int8 input-snapshot panel, so plane tiles cross HBM once
+#:            per layer instead of once per M-stripe (restores weight
+#:            stationarity for act-panel-fitting shapes, +M_pad·d bytes).
+FUSED_MODES = ("whole", "tiled", "mtiled", "wstat")
 
 
 def quantize_tensor(x: jnp.ndarray, bits: int = 8):
@@ -174,11 +190,11 @@ def build_program(layers: Sequence, *, weight_bits: int = 8,
 @dataclass(frozen=True)
 class FusedPlan:
     """Static launch geometry for ``reram_mlp_fused`` plus its per-grid-step
-    VMEM residency under the double-buffered pipelining model. ``tiled``
-    means the N dimension is split (``block_n < d_pad``); ``whole_bytes``
-    records what the whole-layer variant would have cost, so the selection
-    is auditable. ``fits_budget`` is False only when even the smallest tile
-    edge cannot fit (the irreducible activation panel dominates)."""
+    VMEM residency under the double-buffered pipelining model. ``mode`` is
+    one of :data:`FUSED_MODES`; ``whole_bytes`` records what the whole-layer
+    variant would have cost, so the selection is auditable. ``fits_budget``
+    is False only when even the M-tiled dataflow at the smallest tile edge
+    cannot fit."""
 
     d_pad: int
     m_pad: int
@@ -188,9 +204,12 @@ class FusedPlan:
     vmem_bytes: int
     whole_bytes: int
     budget: int = VMEM_BUDGET_BYTES
+    mode: str = "whole"
+    n_planes: int = 4
 
     @property
     def tiled(self) -> bool:
+        """True when the N dimension is split (``block_n < d_pad``)."""
         return self.block_n < self.d_pad
 
     @property
@@ -201,64 +220,180 @@ class FusedPlan:
     def n_steps(self) -> int:
         return self.d_pad // self.block_n
 
+    @property
+    def m_steps(self) -> int:
+        return self.m_pad // self.block_m
+
+    @property
+    def plane_tile_fetches_per_layer(self) -> int:
+        """How many ``(P, d_pad, block_n)`` plane tiles cross HBM→VMEM per
+        layer per batch element. The weight-stationarity metric: with the
+        N-tile innermost ('tiled'/'mtiled', ``n_steps > 1``) the plane-tile
+        block index changes every grid step, so tiles re-stream once per
+        M-stripe; 'wstat' iterates N-tiles outermost and 'whole' has a
+        single resident tile, so each plane byte crosses exactly once."""
+        if self.mode == "wstat":
+            return self.n_steps
+        if self.mode == "whole" or self.n_steps == 1:
+            return 1
+        return self.m_steps * self.n_steps
+
+    @property
+    def plane_hbm_bytes_per_layer(self) -> int:
+        """Plane bytes crossing HBM→VMEM per layer per batch element
+        (``fetches × tile bytes``; equals one full layer for the
+        weight-stationary modes)."""
+        return (self.plane_tile_fetches_per_layer
+                * self.n_planes * self.d_pad * self.block_n)
+
+    @property
+    def act_hbm_bytes_per_layer(self) -> int:
+        """Activation-panel bytes crossing HBM per layer per batch element:
+        zero for the VMEM-panel modes; 'mtiled' reads and writes each f32
+        stripe once per layer (layer 0 skips the read — it consumes the
+        pre-quantized input block instead — so this slightly overcounts
+        the first layer)."""
+        return 8 * self.m_pad * self.d_pad if self.mode == "mtiled" else 0
+
 
 def fused_vmem_bytes(d_pad: int, n_planes: int, m_pad: int,
-                     block_m: int, block_n: int) -> int:
+                     block_m: int, block_n: int,
+                     mode: str = "tiled") -> int:
     """Per-grid-step VMEM residency of the fused kernel at tile edge
-    ``block_n``. Pipelined operand/result blocks are double-buffered (×2,
-    the TPU prefetch-while-compute discipline); scratch buffers are
-    persistent single instances. ``block_k`` does not appear: the K-loop
-    runs over the already-resident ``(P, d_pad, block_n)`` plane tile and
-    only bounds the MXU op footprint, not residency."""
+    ``block_n`` under dataflow ``mode`` (:data:`FUSED_MODES`). Pipelined
+    operand/result blocks are double-buffered (×2, the TPU
+    prefetch-while-compute discipline); scratch buffers are persistent
+    single instances. ``block_k`` does not appear: the K-loop runs over the
+    already-resident ``(P, d_pad, block_n)`` plane tile and only bounds the
+    MXU op footprint, not residency. 'whole' and 'tiled' share one formula
+    (whole is the ``block_n = d_pad`` special case); 'wstat' swaps the
+    one-stripe snapshot for a full int8 panel; 'mtiled' is the only mode
+    with no ``m_pad`` term — its activation panel lives in HBM and a single
+    DMA-staged stripe is resident."""
+    if mode not in FUSED_MODES:
+        raise ValueError(f"mode={mode!r} must be one of {FUSED_MODES}")
+    if mode == "mtiled":
+        blocks = (
+            n_planes * d_pad * block_n  # int8 plane tile
+            + block_m * d_pad           # int8 input stripe (layer 0)
+            + 2 * 4 * block_n           # f32 bias + col-mask tiles
+        )                               # (output is HBM-resident, no block)
+        scratch = (
+            4 * block_m * d_pad         # f32 DMA-staged activation stripe
+            + 4 * block_m * d_pad       # int32 requantized-stripe snapshot
+            + 4 * block_m               # int32 stripe row sums
+        )
+        return 2 * blocks + scratch
     blocks = (
         n_planes * d_pad * block_n      # int8 plane tile
         + block_m * d_pad               # int8 input stripe (layer 0)
         + 4 * block_m * block_n         # f32 output tile
         + 2 * 4 * block_n               # f32 bias + col-mask tiles
     )
-    scratch = (
-        4 * m_pad * d_pad               # f32 inter-layer activation panel
-        + 4 * block_m * d_pad           # int32 requantized-stripe snapshot
-        + 4 * block_m                   # int32 stripe row sums
-    )
+    if mode == "wstat":
+        scratch = (
+            4 * m_pad * d_pad           # f32 inter-layer activation panel
+            + m_pad * d_pad             # int8 input-snapshot panel
+            + 4 * m_pad                 # int32 panel row sums
+        )
+    else:                               # whole / tiled
+        scratch = (
+            4 * m_pad * d_pad           # f32 inter-layer activation panel
+            + 4 * block_m * d_pad       # int32 requantized-stripe snapshot
+            + 4 * block_m               # int32 stripe row sums
+        )
     return 2 * blocks + scratch
 
 
+def _largest_fitting_edge(d, edges, bytes_at, vmem_budget):
+    """Largest tile edge among ``edges`` that divides ``d_pad`` and fits."""
+    for cand in edges:
+        if d % cand == 0 and bytes_at(cand) <= vmem_budget:
+            return cand
+    return None
+
+
+def _edge_candidates(mode: str, d: int) -> range:
+    """Tile edges a mode may take, largest first. 'whole' is defined as the
+    single-N-tile dataflow; 'wstat'/'tiled' only make sense split; 'mtiled'
+    may keep the full edge (single N-tile: planes stay resident across
+    stripes). Shared by pinned-mode and auto selection so both pick the
+    same edge for a given mode."""
+    if mode == "whole":
+        return range(d, d + 1)
+    if mode == "mtiled":
+        return range(d, 0, -CROSSBAR)
+    return range(d - CROSSBAR, 0, -CROSSBAR)
+
+
 def plan_fused_mlp(program: "CrossbarProgram", m_rows: int, *,
+                   mode: str | None = None,
                    block_m: int = CROSSBAR, block_n: int | None = None,
                    block_k: int | None = None,
                    vmem_budget: int = VMEM_BUDGET_BYTES) -> FusedPlan:
-    """Pick the fused-kernel launch geometry for ``m_rows`` activation rows:
-    whole-layer (``block_n = d_pad``, the PR-1 dataflow) when its residency
-    fits ``vmem_budget``, else the largest 128-multiple tile edge that
-    divides ``d_pad`` and fits. Pass ``block_n``/``block_k`` to pin either
-    explicitly (still validated against the crossbar geometry). Pure static
-    arithmetic — safe to call at trace time."""
+    """Pick the fused-kernel launch geometry for ``m_rows`` activation rows.
+
+    With everything unpinned the selector walks :data:`FUSED_MODES` in
+    preference order and takes the first dataflow with a fitting tile edge:
+
+    1. ``whole``  — fully weight-stationary, zero inter-layer HBM traffic;
+    2. ``wstat``  — weight-stationary (planes cross HBM once per layer),
+       activations still on-chip, costs an int8 snapshot panel;
+    3. ``tiled``  — activations on-chip but plane tiles re-stream once per
+       M-stripe (only reachable in the narrow band where the snapshot
+       panel pushes 'wstat' over budget);
+    4. ``mtiled`` — the activation panel spills to HBM and residency stops
+       growing with M: the panel-bound last resort (model2 SA-1 at 8192
+       rows), and the fallback recorded with ``fits_budget=False`` when
+       nothing fits.
+
+    Pass ``mode=`` to pin the dataflow (its largest fitting edge is still
+    auto-picked), and ``block_n``/``block_k`` to pin tile edges explicitly
+    (still validated against the crossbar geometry). For backward
+    compatibility an explicit ``block_n`` without ``mode`` selects the
+    act-panel-in-VMEM dataflow ('whole' when ``block_n == d_pad``, else
+    'tiled'). Pure static arithmetic — safe to call at trace time."""
     d = program.d_pad
     p = program.n_planes
     if block_m % 8 != 0 or block_m <= 0:
         raise ValueError(f"block_m={block_m} must be a positive multiple "
                          f"of 8 (f32 sublane tiling)")
+    if mode is not None and mode not in FUSED_MODES:
+        raise ValueError(f"mode={mode!r} must be one of {FUSED_MODES}")
     m_pad = -(-max(m_rows, 1) // block_m) * block_m
-    whole = fused_vmem_bytes(d, p, m_pad, block_m, d)
 
-    if block_n is None:
-        bn = d
-        if whole > vmem_budget:
-            # largest 128-multiple divisor of d_pad that fits the budget;
-            # fall through to the minimum edge if nothing fits (the act
-            # panel is irreducible at this block_m).
-            bn = CROSSBAR
-            for cand in range(d - CROSSBAR, 0, -CROSSBAR):
-                if d % cand == 0 and fused_vmem_bytes(
-                        d, p, m_pad, block_m, cand) <= vmem_budget:
-                    bn = cand
-                    break
-    else:
+    def bytes_at(md, bn):
+        return fused_vmem_bytes(d, p, m_pad, block_m, bn, mode=md)
+
+    whole = bytes_at("whole", d)
+    if block_n is not None:
         bn = block_n
         if bn <= 0 or bn % CROSSBAR != 0 or d % bn != 0:
             raise ValueError(f"block_n={bn} must be a multiple of "
                              f"{CROSSBAR} dividing d_pad={d}")
+        if mode is None:
+            mode = "whole" if bn == d else "tiled"
+        elif mode == "whole" and bn != d:
+            raise ValueError(f"mode='whole' is the single-N-tile dataflow; "
+                             f"block_n={bn} != d_pad={d}")
+    elif mode is not None:
+        if mode == "whole":
+            bn = d
+        else:
+            bn = _largest_fitting_edge(d, _edge_candidates(mode, d),
+                                       lambda c: bytes_at(mode, c),
+                                       vmem_budget) or CROSSBAR
+    else:
+        # auto: first mode in preference order with a fitting tile edge;
+        # fall through to the smallest M-tiled footprint if nothing fits.
+        mode, bn = "mtiled", CROSSBAR
+        for cand_mode in ("whole", "wstat", "tiled", "mtiled"):
+            found = _largest_fitting_edge(
+                d, _edge_candidates(cand_mode, d),
+                lambda c: bytes_at(cand_mode, c), vmem_budget)
+            if found is not None:
+                mode, bn = cand_mode, found
+                break
     if block_k is None:
         bk = min(d, 4 * CROSSBAR)
     else:
@@ -268,5 +403,5 @@ def plan_fused_mlp(program: "CrossbarProgram", m_rows: int, *,
                              f"{CROSSBAR} dividing d_pad={d}")
     return FusedPlan(
         d_pad=d, m_pad=m_pad, block_m=block_m, block_n=bn, block_k=bk,
-        vmem_bytes=fused_vmem_bytes(d, p, m_pad, block_m, bn),
-        whole_bytes=whole, budget=vmem_budget)
+        vmem_bytes=bytes_at(mode, bn), whole_bytes=whole,
+        budget=vmem_budget, mode=mode, n_planes=p)

@@ -29,11 +29,24 @@ Lifecycle — the same three phases as the accelerator:
             reduction is a max), so logits are bitwise invariant to the
             order; only the DMA traffic changes.
 
-Backends register with the :func:`register_backend` decorator; the three
-built-ins ('float', 'reram', 'reram-fused') are ordinary registry entries,
-and upcoming variants (M-tiled activation panels, j-outer weight
-re-streaming — see ROADMAP) plug in the same way instead of growing new
-kwargs.
+Backends register with the :func:`register_backend` decorator; the five
+built-ins are ordinary registry entries:
+
+  'float'              plain ``a @ w`` float matmuls
+  'reram'              per-layer bit-sliced INT8 crossbar matmuls
+  'reram-fused'        fused weight-stationary MLPs, dataflow auto-picked
+                       by ``plan_fused_mlp`` under the 16 MB VMEM budget
+  'reram-fused-mtiled' fused with the M-tiled dataflow pinned: the
+                       activation panel lives in HBM, per-step residency
+                       is one ``(bm, d)`` stripe — panel-bound shapes
+                       (model2 SA-1 at 8192 rows) run fused
+  'reram-fused-wstat'  fused with the j-outer weight re-streaming
+                       dataflow pinned: plane tiles cross HBM once per
+                       layer (full stationarity) at +M_pad·d bytes for
+                       the int8 input-snapshot panel
+
+New variants plug in the same way (a ``@register_backend`` subclass)
+instead of growing new kwargs.
 """
 from __future__ import annotations
 
@@ -155,16 +168,25 @@ class ReramFusedBackend(Backend):
     """Weight-stationary path: every MLP programmed into crossbar planes
     exactly once at compile time (or pass a prebuilt ``program=`` from
     :func:`repro.models.pointnet2.build_model_program`), then each MLP runs
-    as ONE fused ``pallas_call`` with inter-layer activations in VMEM."""
+    as ONE fused ``pallas_call`` with inter-layer activations on-chip.
+    ``mode`` pins the fused dataflow ('whole' / 'tiled' / 'mtiled' /
+    'wstat', DESIGN.md §3.3); the default defers to ``plan_fused_mlp``'s
+    VMEM-budget auto-selection. The M-tiled and j-outer variants are also
+    first-class registry entries ('reram-fused-mtiled' /
+    'reram-fused-wstat') — subclasses that pin ``mode``."""
 
     batched_in_grid = True
+    #: fused dataflow this registry entry pins (None = auto-select)
+    mode: str | None = None
 
     def __init__(self, params, config, *, program=None,
+                 mode: str | None = None,
                  block_n: int | None = None, block_k: int | None = None,
                  interpret: bool = True):
         super().__init__(params, config)
         self.program = (program if program is not None
                         else _pn.build_model_program(params))
+        self.mode = mode if mode is not None else type(self).mode
         self.block_n = block_n
         self.block_k = block_k
         self.interpret = interpret
@@ -175,13 +197,15 @@ class ReramFusedBackend(Backend):
 
     def apply_mlp(self, key, x, *, final_relu=True):
         return reram_mlp_fused(x, self._prog(key), final_relu=final_relu,
-                               block_n=self.block_n, block_k=self.block_k,
+                               mode=self.mode, block_n=self.block_n,
+                               block_k=self.block_k,
                                interpret=self.interpret)
 
     def apply_mlp_batched(self, key, x, *, final_relu=True):
         return reram_mlp_fused_batched(
-            x, self._prog(key), final_relu=final_relu, block_n=self.block_n,
-            block_k=self.block_k, interpret=self.interpret)
+            x, self._prog(key), final_relu=final_relu, mode=self.mode,
+            block_n=self.block_n, block_k=self.block_k,
+            interpret=self.interpret)
 
     def stats(self) -> dict:
         progs = {f"sa{i}": p for i, p in enumerate(self.program["sa"])}
@@ -198,11 +222,42 @@ class ReramFusedBackend(Backend):
                 "fused_plan": plans}
 
     def _plan_row(self, prog, rows):
-        fp = plan_fused_mlp(prog, rows, block_n=self.block_n,
+        fp = plan_fused_mlp(prog, rows, mode=self.mode, block_n=self.block_n,
                             block_k=self.block_k)
-        return {"mode": "tiled" if fp.tiled else "whole",
+        return {"mode": fp.mode,
                 "block_n": fp.block_n, "vmem_bytes": fp.vmem_bytes,
-                "fits_budget": fp.fits_budget}
+                "fits_budget": fp.fits_budget,
+                "plane_tile_fetches_per_layer":
+                    fp.plane_tile_fetches_per_layer,
+                "plane_hbm_bytes_per_layer": fp.plane_hbm_bytes_per_layer,
+                "act_hbm_bytes_per_layer": fp.act_hbm_bytes_per_layer}
+
+
+@register_backend("reram-fused-mtiled")
+class ReramFusedMTiledBackend(ReramFusedBackend):
+    """'reram-fused' with the M-tiled dataflow pinned: the inter-layer
+    activation panel lives in HBM (the kernel's output buffer) and only one
+    ``(block_m, d_pad)`` stripe is VMEM-resident per grid step, staged by
+    explicit DMA. Residency stops growing with the row count, so
+    panel-bound programs (model2 SA-1 at its real 8192-row count) run
+    fused within the 16 MB budget — at one f32 stripe read + write through
+    HBM per layer."""
+
+    name = "reram-fused-mtiled"
+    mode = "mtiled"
+
+
+@register_backend("reram-fused-wstat")
+class ReramFusedWStatBackend(ReramFusedBackend):
+    """'reram-fused' with the j-outer weight re-streaming dataflow pinned:
+    N-tiles iterate outermost over a full int8 input-snapshot panel, so
+    each plane tile crosses HBM once per layer instead of once per M-stripe
+    — restores true weight stationarity for N-tiled shapes whose
+    activation panel still fits VMEM (model2 SA-2), at +``M_pad·d_pad``
+    bytes for the snapshot panel."""
+
+    name = "reram-fused-wstat"
+    mode = "wstat"
 
 
 # ---------------------------------------------------------------------------

@@ -15,30 +15,22 @@ dry-run/trainer lower, while ``repro.core`` is what the accelerator
 simulator consumes.
 
 Backend selection lives in ``repro.models.backend`` (the registry +
-``compile_model`` entry point); this module keeps the geometry primitives
-(FPS, kNN, ``_sa_geometry``), parameter init, ``build_model_program``, and
+``compile_model`` entry point — see the backend table in README.md and
+DESIGN.md §9); this module keeps the geometry primitives (FPS, kNN,
+``_sa_geometry``), parameter init, ``build_model_program``, and
 ``_apply_mlp`` that the registered backends compose, plus
-``forward``/``batched_forward``/``loss_fn`` as thin delegates whose old
-``matmul=`` / ``program=`` kwargs are deprecated shims (one release) for:
+``forward``/``batched_forward``/``loss_fn`` as thin float-backend
+delegates for quick scripting. The pre-registry ``matmul=``/``program=``
+kwargs — deprecated shims since PR 3 — are gone; DESIGN.md §9 keeps the
+migration table as the historical record.
 
-  float         : ``compile_model(params, config)`` — plain ``a @ w``
-  'reram'       : ``compile_model(..., backend='reram')`` — per-layer INT8 /
-                  2-bit-cell bit-sliced crossbar matmuls, weights
-                  re-encoded inside every traced call
-  'reram-fused' : ``compile_model(..., backend='reram-fused')`` — the
-                  weight-stationary path: weights encoded exactly once at
-                  program time, each MLP ONE fused ``pallas_call``
-                  (batch-in-grid under ``batched_forward``)
-
-Both ReRAM backends are numerically the quantized network (paper's
-no-accuracy-variation property); the fused path shares the per-layer
-path's integer arithmetic exactly. See DESIGN.md §9 for the migration
-table.
+All ReRAM backends are numerically the quantized network (paper's
+no-accuracy-variation property); the fused paths share the per-layer
+path's integer arithmetic exactly.
 """
 from __future__ import annotations
 
 import functools
-import warnings
 from typing import Any
 
 import jax
@@ -46,7 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.workload import PointNetConfig, SALayerSpec
-from repro.kernels import build_program, reram_mlp_fused
+from repro.kernels import build_program
 
 Params = Any
 
@@ -155,72 +147,39 @@ def _sa_geometry(spec: SALayerSpec, points, features):
     return c_pts, f_nbr - f_ctr                         # aggregation D(.)
 
 
-def sa_layer(mlp_params, spec: SALayerSpec, points, features, *,
-             matmul=None, program=None):
-    """One set-abstraction layer on a single cloud.
-    points (N, 3), features (N, C_in) -> (M, 3), (M, C_out).
-    The ``matmul=``/``program=`` backend selectors are deprecated like the
-    ones on ``forward`` — compose ``_sa_geometry`` with a registered
-    backend's ``apply_mlp`` instead (``repro.models.backend``)."""
-    if matmul is not None or program is not None:
-        warnings.warn(
-            "pointnet2.sa_layer(matmul=/program=...) is deprecated; use "
-            "repro.compile_model(params, config, backend=...) — see the "
-            "migration table in DESIGN.md §9", DeprecationWarning,
-            stacklevel=2)
+def sa_layer(mlp_params, spec: SALayerSpec, points, features):
+    """One set-abstraction layer on a single cloud, float backend.
+    points (N, 3), features (N, C_in) -> (M, 3), (M, C_out). For any other
+    backend, compose ``_sa_geometry`` with a registered backend's
+    ``apply_mlp`` (``repro.models.backend``)."""
     c_pts, diff = _sa_geometry(spec, points, features)
-    if program is not None:
-        h = reram_mlp_fused(diff, program)              # feature comp. M(.)
-    else:
-        h = _apply_mlp(mlp_params, diff, matmul=matmul)
+    h = _apply_mlp(mlp_params, diff)                    # feature comp. M(.)
     out = jnp.max(h, axis=1)                            # reduction
     return c_pts, out
 
 
-def _compile_legacy(params, config, *, matmul, program, caller: str):
-    """Map the deprecated ``matmul=``/``program=`` kwargs onto the backend
-    registry (``repro.models.backend``), warning when either is used."""
+def forward(params: Params, config: PointNetConfig,
+            cloud: jnp.ndarray) -> jnp.ndarray:
+    """Single-cloud float forward: (N, 3) -> logits (n_classes,). Thin
+    delegate to :func:`repro.models.backend.compile_model` — the canonical
+    entry point, and the place to pick any other backend or schedule."""
     from repro.models.backend import compile_model
-    if matmul is not None and program is not None:
-        raise ValueError("pass either matmul= or program=, not both")
-    if matmul is not None or program is not None:
-        kw = "program=" if program is not None else "matmul="
-        warnings.warn(
-            f"pointnet2.{caller}({kw}...) is deprecated; use "
-            f"repro.compile_model(params, config, backend=...) — see the "
-            f"migration table in DESIGN.md §9", DeprecationWarning,
-            stacklevel=3)
-    if program is not None:
-        return compile_model(params, config, backend="reram-fused",
-                             program=program)
-    return compile_model(params, config, backend="float", matmul=matmul)
+    return compile_model(params, config).forward(cloud)
 
 
-def forward(params: Params, config: PointNetConfig, cloud: jnp.ndarray, *,
-            matmul=None, program=None) -> jnp.ndarray:
-    """Single-cloud forward: (N, 3) -> logits (n_classes,).
-
-    Thin delegate to :func:`repro.models.backend.compile_model` — the
-    canonical entry point. The ``matmul=`` / ``program=`` kwargs are the
-    pre-registry backend selectors, kept for one release as deprecated
-    shims (``matmul=`` ≙ ``backend='float'`` with a custom matmul;
-    ``program=`` ≙ ``backend='reram-fused'`` with a prebuilt program)."""
-    return _compile_legacy(params, config, matmul=matmul, program=program,
-                           caller="forward").forward(cloud)
+def batched_forward(params, config, clouds):
+    """Batch of clouds (B, N, 3) -> logits (B, n_classes), float backend.
+    Thin delegate to the compiled-model API; backend dispatch (vmapped
+    forward for float / per-layer reram, ONE batch-in-grid ``pallas_call``
+    per MLP for the fused backends) lives in
+    ``repro.models.backend.CompiledModel``."""
+    from repro.models.backend import compile_model
+    return compile_model(params, config).batched_forward(clouds)
 
 
-def batched_forward(params, config, clouds, *, matmul=None, program=None):
-    """Batch of clouds (B, N, 3) -> logits (B, n_classes). Thin delegate to
-    the compiled-model API; backend dispatch (vmapped forward for float /
-    per-layer reram, ONE batch-in-grid ``pallas_call`` per MLP for the
-    fused backend) now lives in ``repro.models.backend.CompiledModel``."""
-    return _compile_legacy(params, config, matmul=matmul, program=program,
-                           caller="batched_forward").batched_forward(clouds)
-
-
-def loss_fn(params, config, clouds, labels, *, matmul=None, program=None):
-    return _compile_legacy(params, config, matmul=matmul, program=program,
-                           caller="loss_fn").loss_fn(clouds, labels)
+def loss_fn(params, config, clouds, labels):
+    from repro.models.backend import compile_model
+    return compile_model(params, config).loss_fn(clouds, labels)
 
 
 @functools.partial(jax.jit, static_argnames=("config",))

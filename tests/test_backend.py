@@ -8,10 +8,13 @@ The redesign's contract, tested end to end:
     the measured DMA-elision count of the plan-ordered gather strictly
     improves under 'greedy'/'morton' vs 'index' on clustered clouds;
   * ``MODE_PRESETS`` names round-trip through ``compile_model(schedule=)``;
-  * the old ``matmul=``/``program=`` kwargs still work but warn.
-"""
-import warnings
+  * the fused-dataflow registry entries ('reram-fused-mtiled' /
+    'reram-fused-wstat') pin their mode and match 'reram-fused' bitwise.
 
+(The deprecated ``matmul=``/``program=`` kwarg shims were removed one
+release after PR 3, as scheduled — DESIGN.md §9 keeps the migration
+table as the historical record.)
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -58,7 +61,8 @@ def setup():
 # ---------------------------------------------------------------------------
 
 def test_builtin_backends_registered():
-    assert {"float", "reram", "reram-fused"} <= set(available_backends())
+    assert {"float", "reram", "reram-fused", "reram-fused-mtiled",
+            "reram-fused-wstat"} <= set(available_backends())
 
 
 def test_unknown_backend_names_registered_ones(setup):
@@ -271,7 +275,7 @@ def test_planned_schedule_rejects_jit_tracing(setup):
 
 
 # ---------------------------------------------------------------------------
-# stats + deprecated shims
+# stats + fused-dataflow registry entries
 # ---------------------------------------------------------------------------
 
 def test_stats_reports_program_and_plan(setup):
@@ -281,28 +285,44 @@ def test_stats_reports_program_and_plan(setup):
     assert st["schedule"] == {"intra": "index", "coordinated": False}
     assert st["program_bytes"] > 0
     assert set(st["fused_plan"]) == {"sa0", "sa1", "head"}
-    assert all(p["mode"] in ("whole", "tiled")
+    assert all(p["mode"] in ("whole", "tiled", "mtiled", "wstat")
+               for p in st["fused_plan"].values())
+    assert all(p["plane_tile_fetches_per_layer"] >= 1
                for p in st["fused_plan"].values())
     assert compile_model(params, cfg).stats()["program_bytes"] == 0
 
 
-def test_deprecated_kwargs_warn_and_match(setup):
+@pytest.mark.parametrize("backend,mode", [
+    ("reram-fused-mtiled", "mtiled"),
+    ("reram-fused-wstat", "wstat"),
+])
+def test_fused_dataflow_backends_pin_mode_and_match(setup, backend, mode):
+    """The M-tiled and j-outer dataflows are first-class registry entries,
+    not kwargs: they pin their fused-plan mode in stats and reproduce the
+    auto-selected 'reram-fused' logits bitwise (all dataflows share one
+    integer pipeline)."""
     cfg, params, cloud = setup
-    prog = pn.build_model_program(params)
-    fused = compile_model(params, cfg, backend="reram-fused",
-                          program=prog).forward(cloud)
-    with pytest.warns(DeprecationWarning, match="compile_model"):
-        old = pn.forward(params, cfg, cloud, program=prog)
-    assert bool(jnp.all(old == fused))
-    mm = lambda a, w: a @ w
-    with pytest.warns(DeprecationWarning, match="DESIGN.md"):
-        old_mm = pn.batched_forward(params, cfg, jnp.stack([cloud]),
-                                    matmul=mm)
-    new_mm = compile_model(params, cfg, matmul=mm).batched_forward(
-        jnp.stack([cloud]))
-    assert bool(jnp.all(old_mm == new_mm))
-    with pytest.raises(ValueError, match="not both"):
-        pn.forward(params, cfg, cloud, matmul=mm, program=prog)
+    base = compile_model(params, cfg, backend="reram-fused").forward(cloud)
+    m = compile_model(params, cfg, backend=backend)
+    assert m.backend_name == backend
+    assert bool(jnp.all(m.forward(cloud) == base))
+    st = m.stats()
+    assert all(p["mode"] == mode for p in st["fused_plan"].values())
+    # batched path stays batch-in-grid for the pinned dataflows too
+    clouds = jnp.stack([cloud, cloud * 0.5])
+    bat = m.batched_forward(clouds)
+    assert bool(jnp.all(bat[0] == m.forward(cloud)))
+
+
+def test_mode_kwarg_pins_dataflow_on_base_backend(setup):
+    """``compile_model(..., backend='reram-fused', mode=...)`` pins the
+    dataflow without a dedicated registry entry (the entries are sugar)."""
+    cfg, params, cloud = setup
+    base = compile_model(params, cfg, backend="reram-fused").forward(cloud)
+    m = compile_model(params, cfg, backend="reram-fused", mode="wstat")
+    assert bool(jnp.all(m.forward(cloud) == base))
+    assert all(p["mode"] == "wstat"
+               for p in m.stats()["fused_plan"].values())
 
 
 def test_public_api_surface():

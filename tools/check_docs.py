@@ -1,0 +1,52 @@
+"""Execute the documentation front door so it cannot rot.
+
+1. Extracts every ```python fenced block from README.md and executes them
+   in order in one shared namespace (the quickstart snippet is a real
+   program, not decoration).
+2. Runs the doctest suite of the public API surface
+   (``src/repro/__init__.py``) via pytest.
+
+Run:  PYTHONPATH=src JAX_PLATFORMS=cpu python tools/check_docs.py
+CI runs this in the ``docs`` job on every push.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+FENCE = re.compile(r"^```python\n(.*?)^```$", re.M | re.S)
+
+
+def run_readme_snippets(path: pathlib.Path) -> int:
+    blocks = FENCE.findall(path.read_text())
+    if not blocks:
+        print(f"ERROR: no ```python blocks found in {path}", file=sys.stderr)
+        return 1
+    ns: dict = {"__name__": "__readme__"}
+    for i, src in enumerate(blocks, 1):
+        print(f"-- executing {path.name} python block {i}/{len(blocks)} "
+              f"({len(src.splitlines())} lines)")
+        code = compile(src, f"{path.name}#block{i}", "exec")
+        exec(code, ns)          # noqa: S102 — executing our own docs is the point
+    print(f"OK: {len(blocks)} README block(s) executed")
+    return 0
+
+
+def run_doctests() -> int:
+    target = ROOT / "src" / "repro" / "__init__.py"
+    print(f"-- running doctests: {target.relative_to(ROOT)}")
+    return subprocess.call(
+        [sys.executable, "-m", "pytest", "--doctest-modules", "-q",
+         str(target)], cwd=ROOT)
+
+
+def main() -> int:
+    rc = run_readme_snippets(ROOT / "README.md")
+    return rc or run_doctests()
+
+
+if __name__ == "__main__":
+    sys.exit(main())
