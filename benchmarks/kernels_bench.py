@@ -175,4 +175,29 @@ def kernels(iters=3):
         "api/compiled_batched_forward/4x64", us_new,
         f"compile_in_trace_us={us_old:.3f};dispatch_overhead="
         f"{us_new / max(us_old, 1e-9):.2f}x"))
+    # batched plan-driven execution: per-cloud plans stacked into ONE
+    # batched DevicePlan, each SA layer a single batch-gridded
+    # aggregate_diff_batched launch — vs the old per-cloud Python loop
+    # (stack of planned single-cloud forwards). Bitwise-equal logits. The
+    # structural quantities are what transfer: the gather-launch collapse
+    # (B*L -> L) and the measured DMA elisions of the whole batch;
+    # host_ratio is interpret-mode wall time (noisy, characterizes the
+    # host Python loop, not a TPU).
+    model_p = compile_model(params, cfg_t, backend="reram-fused",
+                            program=prog, schedule="pointer")
+    def batched_plan(c):
+        return model_p.batched_forward(c)
+    def per_cloud_loop(c):
+        return jnp.stack([model_p.forward(x) for x in c])
+    us_b = _time(batched_plan, clouds, iters=1)
+    st = model_p.stats()["dma"]   # measured streams of the BATCHED run —
+    # read before per_cloud_loop overwrites the cached last-execution stats
+    us_l = _time(per_cloud_loop, clouds, iters=1)
+    B, L = clouds.shape[0], cfg_t.n_layers
+    rows.append(row(
+        f"api/batched_plan_forward/{B}x64", us_b,
+        f"per_cloud_loop_us={us_l:.0f};"
+        f"host_ratio={us_l / max(us_b, 1e-9):.2f}x;"
+        f"gather_launches={L}_vs_{B * L};elided={st['elided']};"
+        f"elision_rate={st['elision_rate']:.3f}"))
     return rows

@@ -69,6 +69,23 @@ def main():
           f"executed-gather elision "
           f"{st['dma']['elision_rate']:.1%}")
 
+    # the same decisions, made by the cost model instead of by name: the
+    # policy picks the intra order per workload (predicted DMA elisions)
+    # and the fused dataflows per MLP (predicted HBM bytes-per-cycle) —
+    # and batched_forward folds the per-cloud plan loop into ONE
+    # batch-gridded gather launch per SA layer
+    from repro import PlanPolicy
+    model_p = compile_model(params, cfg, backend="reram-fused",
+                            policy=PlanPolicy())
+    picked = model_p.policy.select_intra(wl)
+    clouds = jnp.stack([cloud, cloud * 0.98])
+    bat = model_p.batched_forward(clouds)
+    assert bool(jnp.all(bat[0] == model_q.forward(cloud)))
+    print(f"policy compile: intra picked per workload = {picked!r}; "
+          f"batched plan-driven forward = {cfg.n_layers} gather launches "
+          f"for {clouds.shape[0]} clouds (one per SA layer), logits "
+          f"bitwise-equal to the per-cloud loop")
+
 
 if __name__ == "__main__":
     main()

@@ -47,10 +47,33 @@ entries force one:
 >>> {p["mode"] for p in st["fused_plan"].values()}
 {'mtiled'}
 
-**MODE_PRESETS / build_plan / ExecutionPlan** — paper Algorithm 1
-scheduling (``repro.core.schedule``). Preset names round-trip through
-``compile_model(schedule=...)`` and drive both the simulator and the
-execution gather order (bitwise-invariant logits, fewer DMAs):
+**PlanPolicy** — the cost model behind both scheduling decisions
+(``repro.core.policy``): fused dataflows picked on predicted HBM
+bytes-per-cycle (roofline, pluggable :class:`RooflineParams` constants
+from ``repro.core.energy``) instead of VMEM fit alone, and the
+intra-layer order picked per workload by predicted DMA elisions.
+``compile_model(..., policy=...)`` wires it into both; the old
+``schedule=`` kwarg stays as the thin adapter that pins the ordering:
+
+>>> policy = repro.PlanPolicy(coordinated=True)
+>>> m = repro.compile_model(params, cfg, backend="reram-fused",
+...                         policy=policy)
+>>> m.schedule["intra"]                   # picked per workload, not fixed
+'auto'
+>>> bool(jnp.all(m.forward(cloud) ==
+...              repro.compile_model(params, cfg,
+...                                  backend="reram-fused").forward(cloud)))
+True
+
+**MODE_PRESETS / build_plan / ExecutionPlan / DevicePlan** — paper
+Algorithm 1 scheduling (``repro.core.schedule``). Preset names round-trip
+through ``compile_model(schedule=...)`` and drive both the simulator and
+the execution gather order (bitwise-invariant logits, fewer DMAs). A
+prebuilt ``ExecutionPlan`` is lowered ONCE at compile time to a
+``DevicePlan`` — stacked int32 order/inverse-permutation device tensors —
+so planned forwards run under ``jax.jit``; ``batched_forward`` under any
+planned schedule stacks per-cloud plans and issues ONE batch-gridded
+``aggregate_diff_batched`` gather per SA layer:
 
 >>> sorted(repro.MODE_PRESETS)
 ['baseline', 'pointer', 'pointer-1', 'pointer-12', 'pointer-morton']
@@ -63,6 +86,10 @@ True
 'greedy'
 >>> np.asarray(plan.order_of(2)).shape    # layer-2 execution order
 (8,)
+>>> dm = repro.compile_model(params, cfg, schedule=plan)  # lowered here
+>>> dm.device_plan.order_of(2).shape      # completed, device-resident
+(8,)
+>>> logits = jax.jit(dm.forward)(cloud)   # device plans trace under jit
 
 **CrossbarProgram** — the weight-stationary lifecycle
 (``repro.kernels.program``): every MLP quantized + 2-bit-plane-encoded
@@ -80,24 +107,30 @@ Everything else stays importable from its submodule (``repro.core``,
 ``repro.kernels``, ``repro.models``, ...); see README.md for the
 backend table and the paper-section → module map.
 """
-from repro.core.schedule import ExecutionPlan, MODE_PRESETS, build_plan
+from repro.core.energy import RooflineParams
+from repro.core.policy import PlanPolicy
+from repro.core.schedule import (DevicePlan, ExecutionPlan, MODE_PRESETS,
+                                 build_plan)
 from repro.core.workload import (PAPER_MODELS, PointNetConfig,
                                  PointNetWorkload)
 from repro.kernels import CrossbarProgram
 from repro.models.backend import (Backend, CompiledModel, available_backends,
                                   compile_model, register_backend)
 
-__version__ = "0.4.0"
+__version__ = "0.5.0"
 
 __all__ = [
     "Backend",
     "CompiledModel",
     "CrossbarProgram",
+    "DevicePlan",
     "ExecutionPlan",
     "MODE_PRESETS",
     "PAPER_MODELS",
+    "PlanPolicy",
     "PointNetConfig",
     "PointNetWorkload",
+    "RooflineParams",
     "available_backends",
     "build_plan",
     "compile_model",

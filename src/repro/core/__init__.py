@@ -9,10 +9,12 @@
 """
 from .workload import (PAPER_MODELS, PointNetConfig, PointNetWorkload,
                        SALayerSpec, farthest_point_sample_np, knn_np)
-from .schedule import (ExecutionPlan, MODE_PRESETS, build_plan,
-                       greedy_nn_order, morton_order, coordinate_layers)
+from .schedule import (DevicePlan, ExecutionPlan, MODE_PRESETS, build_plan,
+                       complete_order, greedy_nn_order, inverse_permutation,
+                       morton_order, coordinate_layers)
 from .buffer import BufferModel, BeladyBuffer
-from .energy import DEFAULT_HW, HWParams
+from .energy import DEFAULT_HW, DEFAULT_ROOFLINE, HWParams, RooflineParams
+from .policy import DEFAULT_POLICY, PlanPolicy
 from .reram import (CrossbarMapping, bit_slice, crossbar_matmul,
                     map_mlp_to_arrays, quantize_weights)
 from .simulator import DESIGN_POINTS, SimResult, run_design, simulate
@@ -20,10 +22,12 @@ from .simulator import DESIGN_POINTS, SimResult, run_design, simulate
 __all__ = [
     "PAPER_MODELS", "PointNetConfig", "PointNetWorkload", "SALayerSpec",
     "farthest_point_sample_np", "knn_np",
-    "ExecutionPlan", "MODE_PRESETS", "build_plan", "greedy_nn_order",
+    "DevicePlan", "ExecutionPlan", "MODE_PRESETS", "build_plan",
+    "complete_order", "greedy_nn_order", "inverse_permutation",
     "morton_order", "coordinate_layers",
     "BufferModel", "BeladyBuffer",
-    "DEFAULT_HW", "HWParams",
+    "DEFAULT_HW", "DEFAULT_ROOFLINE", "HWParams", "RooflineParams",
+    "DEFAULT_POLICY", "PlanPolicy",
     "CrossbarMapping", "bit_slice", "crossbar_matmul", "map_mlp_to_arrays",
     "quantize_weights",
     "DESIGN_POINTS", "SimResult", "run_design", "simulate",

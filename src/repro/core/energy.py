@@ -21,7 +21,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-__all__ = ["HWParams", "DEFAULT_HW"]
+__all__ = ["HWParams", "DEFAULT_HW", "RooflineParams", "DEFAULT_ROOFLINE"]
 
 
 @dataclass(frozen=True)
@@ -79,3 +79,31 @@ class HWParams:
 
 
 DEFAULT_HW = HWParams()
+
+
+@dataclass(frozen=True)
+class RooflineParams:
+    """Roofline constants for the **TPU twin** (the execution side), as
+    opposed to :class:`HWParams` (the simulated 40 nm accelerator). These
+    feed :class:`repro.core.policy.PlanPolicy`'s cost models: predicted
+    HBM bytes / ``hbm_bytes_per_cycle`` is the memory-bound cycle count a
+    fused dataflow pays, compared against the MXU-bound cycle count —
+    ``max`` of the two is the roofline estimate.
+
+    Defaults describe a single v4-like core (conservative round numbers;
+    the absolute scale cancels out of mode *choices*, only the
+    compute/memory *ratio* matters). Override the dataclass fields to
+    re-tune for a different part.
+    """
+
+    hbm_gbps: float = 819.0             # HBM bandwidth per core
+    freq_ghz: float = 0.94              # core clock
+    vmem_bytes: int = 16 * 2 ** 20      # per-core VMEM (fused-kernel budget)
+    mxu_macs_per_cycle: int = 128 * 128  # one 128x128 MXU pass per cycle
+
+    @property
+    def hbm_bytes_per_cycle(self) -> float:
+        return self.hbm_gbps / self.freq_ghz
+
+
+DEFAULT_ROOFLINE = RooflineParams()

@@ -1,0 +1,158 @@
+"""PlanPolicy — the cost model behind every scheduling decision.
+
+PR 3 made execution plan-driven and PR 4 gave the fused MLP four
+dataflows, but the two *auto-selection* decisions stayed ad hoc:
+``plan_fused_mlp`` picked a dataflow purely on VMEM fit (first mode in
+preference order that fits), and the intra-layer order ('index' /
+'greedy' / 'morton') had to be named by the caller. :class:`PlanPolicy`
+unifies both behind one cost-model interface:
+
+  * ``predict_hbm_bytes``   — HBM bytes a fused dataflow moves per layer
+    (``FusedPlan.plane_hbm_bytes_per_layer + act_hbm_bytes_per_layer``);
+  * ``fused_cost``          — roofline cycles: ``max`` of MXU-bound
+    compute cycles and those bytes over the HBM bandwidth of the
+    pluggable :class:`~repro.core.energy.RooflineParams`;
+  * ``predict_dma_elisions``— measured elision count of the plan-ordered
+    ``aggregate_diff`` neighbor stream an intra mode would produce on a
+    concrete workload (the TPU twin of the paper's buffer hit rate);
+  * ``select_fused_plan`` / ``select_intra`` / ``build_plan`` — the two
+    decisions themselves, each an argmin/argmax over the predictions.
+
+``compile_model(params, config, backend=..., policy=PlanPolicy())`` wires
+a policy into both places at compile time; the old ``schedule=`` kwarg
+remains a thin adapter that pins the ordering decision while the policy
+(when also given) still drives the fused-dataflow one. The policy is
+pure host-side arithmetic — decisions happen once at compile/plan time
+and produce static kernel parameters, never traced values.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .energy import DEFAULT_ROOFLINE, RooflineParams
+from .schedule import ExecutionPlan, build_plan, complete_order
+from .workload import PointNetWorkload
+
+__all__ = ["PlanPolicy", "DEFAULT_POLICY"]
+
+
+@dataclass(frozen=True)
+class PlanPolicy:
+    """Roofline cost models + the two scheduling decisions they drive.
+
+    hw            : roofline constants (bandwidth, clock, MXU width) —
+                    pluggable, defaults to
+                    :data:`repro.core.energy.DEFAULT_ROOFLINE`.
+    vmem_budget   : per-core VMEM budget candidate dataflows must fit
+                    (defaults to ``hw.vmem_bytes``).
+    window        : VMEM working-set rows for the DMA-elision model
+                    (72 rows ~ the paper's 9 KB buffer at 128 B/row).
+    intra_candidates / coordinated : the ordering design space
+                    ``select_intra`` searches and the inter-layer
+                    coordination it pairs the winner with.
+    """
+
+    hw: RooflineParams = DEFAULT_ROOFLINE
+    vmem_budget: int = 0            # 0 -> hw.vmem_bytes
+    window: int = 72
+    intra_candidates: tuple[str, ...] = ("index", "greedy", "morton")
+    coordinated: bool = True
+
+    def __post_init__(self):
+        if self.vmem_budget <= 0:
+            object.__setattr__(self, "vmem_budget", self.hw.vmem_bytes)
+
+    # -- fused-dataflow cost model ------------------------------------------
+
+    def predict_hbm_bytes(self, fused_plan, *, n_layers: int = 1) -> int:
+        """Predicted HBM bytes one fused-MLP launch moves under
+        ``fused_plan``'s dataflow: plane tiles crossing HBM→VMEM plus the
+        activation-panel stripes ('mtiled' only), per layer, times
+        ``n_layers``. The two ``FusedPlan`` per-layer counters are the
+        ingredients; this is the quantity the roofline choice minimizes."""
+        return n_layers * (fused_plan.plane_hbm_bytes_per_layer
+                           + fused_plan.act_hbm_bytes_per_layer)
+
+    def predict_compute_cycles(self, fused_plan, *, n_layers: int = 1) -> float:
+        """MXU-bound cycles for the same launch: ``m_pad x d_pad x d_pad``
+        MACs per layer through ``hw.mxu_macs_per_cycle``, times the
+        ``n_planes`` bit-plane passes of the integer pipeline."""
+        macs = fused_plan.m_pad * fused_plan.d_pad * fused_plan.d_pad
+        return n_layers * fused_plan.n_planes * macs / self.hw.mxu_macs_per_cycle
+
+    def fused_cost(self, fused_plan, *, n_layers: int = 1) -> float:
+        """Roofline cycle estimate: ``max(compute-bound, memory-bound)``.
+        Equal compute across dataflows means the argmin reduces to
+        predicted bytes-per-cycle exactly when the shape is memory-bound —
+        and ties (compute-bound shapes) fall back to the caller's
+        preference order."""
+        hbm_cycles = (self.predict_hbm_bytes(fused_plan, n_layers=n_layers)
+                      / self.hw.hbm_bytes_per_cycle)
+        return max(self.predict_compute_cycles(fused_plan,
+                                               n_layers=n_layers),
+                   hbm_cycles)
+
+    def select_fused_plan(self, program, m_rows: int, **kw):
+        """Roofline-selected launch geometry for ``program`` at ``m_rows``
+        activation rows: :func:`repro.kernels.plan_fused_mlp` with this
+        policy plugged in (see its docstring for the candidate walk)."""
+        from repro.kernels.program import plan_fused_mlp
+        return plan_fused_mlp(program, m_rows, policy=self, **kw)
+
+    # -- intra-layer ordering cost model ------------------------------------
+
+    def _plan_elisions(self, workload: PointNetWorkload, plan: ExecutionPlan,
+                       window: int | None = None) -> int:
+        """Total elisions of ``plan``'s orphan-completed, plan-ordered
+        ``aggregate_diff`` neighbor streams — exactly the streams the
+        executed gather runs."""
+        from repro.kernels.ops import count_dma_elisions
+        window = self.window if window is None else window
+        elided = 0
+        for k in range(1, workload.n_layers + 1):
+            nb = np.asarray(workload.neighbors[k])
+            order = complete_order(np.asarray(plan.order_of(k)),
+                                   nb.shape[0], k)
+            elided += count_dma_elisions(nb[order], window=window)["elided"]
+        return elided
+
+    def predict_dma_elisions(self, workload: PointNetWorkload, *,
+                             intra: str, coordinated: bool | None = None,
+                             window: int | None = None) -> int:
+        """Total DMA elisions the plan-ordered ``aggregate_diff`` neighbor
+        streams of ``intra`` would produce on ``workload`` under a
+        ``window``-row VMEM working set."""
+        plan = build_plan(
+            workload, intra=intra,
+            coordinated=self.coordinated if coordinated is None
+            else coordinated)
+        return self._plan_elisions(workload, plan, window)
+
+    def _select_plan(self, workload: PointNetWorkload) -> ExecutionPlan:
+        """Build each candidate's plan ONCE, score it, return the winner —
+        the plan construction (greedy ordering is O(n^2)) is the expensive
+        part, so the chosen plan is reused, not rebuilt. Ties keep
+        candidate order, so 'index' wins when reordering buys nothing."""
+        best_plan, best_elided = None, -1
+        for cand in self.intra_candidates:
+            plan = build_plan(workload, intra=cand,
+                              coordinated=self.coordinated)
+            e = self._plan_elisions(workload, plan)
+            if e > best_elided:
+                best_plan, best_elided = plan, e
+        return best_plan
+
+    def select_intra(self, workload: PointNetWorkload) -> str:
+        """The intra mode among ``intra_candidates`` with the most
+        predicted DMA elisions on ``workload``."""
+        return self._select_plan(workload).intra
+
+    def build_plan(self, workload: PointNetWorkload) -> ExecutionPlan:
+        """The ordering decision end to end: pick the intra mode by
+        predicted elisions and return the winning (coordinated) plan."""
+        return self._select_plan(workload)
+
+
+DEFAULT_POLICY = PlanPolicy()

@@ -33,10 +33,13 @@ from .workload import PointNetWorkload
 
 __all__ = [
     "ExecutionPlan",
+    "DevicePlan",
     "greedy_nn_order",
     "morton_order",
     "coordinate_layers",
     "build_plan",
+    "complete_order",
+    "inverse_permutation",
     "MODE_PRESETS",
 ]
 
@@ -59,8 +62,166 @@ class ExecutionPlan:
     intra: str
     coordinated: bool
 
+    @property
+    def n_layers(self) -> int:
+        return len(self.orders)
+
     def order_of(self, layer: int) -> np.ndarray:
+        """Execution order of layer ``layer`` (1-based, like the paper).
+        Raises ``ValueError`` for a layer outside ``1..n_layers`` — Python
+        indexing would otherwise silently wrap ``layer=0`` to the LAST
+        layer and feed a wrong gather order downstream."""
+        if not 1 <= layer <= self.n_layers:
+            raise ValueError(
+                f"layer must be in 1..{self.n_layers} (1-based SA layer "
+                f"index); got {layer}")
         return self.orders[layer - 1]
+
+
+def inverse_permutation(order: np.ndarray) -> np.ndarray:
+    """Inverse of a permutation: ``inv[order] = arange(n)`` — the scatter
+    that puts plan-ordered results back into index order."""
+    inv = np.empty_like(order)
+    inv[order] = np.arange(order.shape[0], dtype=order.dtype)
+    return inv
+
+
+def complete_order(order: np.ndarray, n: int, layer: int = 0) -> np.ndarray:
+    """Complete a (possibly partial) layer order into a full permutation of
+    ``range(n)``.
+
+    A coordinated plan schedules a lower-layer point only when some
+    last-layer receptive field needs it; points outside every field are
+    dead compute for the network output and absent from the order. The
+    dense kernels still run all ``n`` rows (the fused MLP's quant scales
+    are global over the launch), so the orphans are appended at the tail —
+    after every scheduled point, changing no scheduled DMA.
+
+    Duplicate or out-of-range indices raise ``ValueError`` (even when the
+    order is already full length — a duplicated index would otherwise
+    silently drop a row from the gather and double another)."""
+    order = np.asarray(order)
+    if order.ndim != 1:
+        raise ValueError(f"layer-{layer} order must be 1-D; got shape "
+                         f"{order.shape}")
+    if order.shape[0] > n or (order.size
+                              and (order.min() < 0 or order.max() >= n)):
+        raise ValueError(
+            f"ExecutionPlan layer-{layer} order has {order.shape[0]} "
+            f"indices; expected at most {n} distinct values in [0, {n})")
+    if np.unique(order).shape[0] != order.shape[0]:
+        raise ValueError(
+            f"ExecutionPlan layer-{layer} order contains duplicate "
+            f"indices; each point must be scheduled exactly once")
+    if order.shape[0] == n:
+        return order
+    missing = np.setdiff1d(np.arange(n, dtype=order.dtype), order)
+    return np.concatenate([order, missing])
+
+
+class DevicePlan:
+    """A frozen, device-array ``ExecutionPlan``: the schedule as a compiled
+    artifact rather than a host loop.
+
+    ``lower`` completes each layer order to a full permutation of the
+    layer's size (``complete_order``), builds the inverse scatter
+    permutations, converts everything to stacked int32 device tensors, and
+    — given several same-config plans — stacks them along a leading batch
+    axis. The result is a registered pytree of plain ``jnp`` arrays, so it
+    is jit/vmap-safe: ``compile_model(..., schedule=plan)`` lowers the
+    plan once at compile time, and planned ``forward``/``batched_forward``
+    run under ``jax.jit`` with the orders as ordinary device operands
+    (the host never rebuilds the plan per call).
+
+    orders[k-1]   : (n_k,) — or (B, n_k) when batched — int32 permutation
+                    executing layer k (padded/completed to the layer size)
+    inverses[k-1] : matching inverse permutations (the scatter back to
+                    index order that keeps logits order-invariant)
+    """
+
+    def __init__(self, orders, inverses, layer_sizes, intra="custom",
+                 coordinated=False):
+        self.orders = tuple(orders)
+        self.inverses = tuple(inverses)
+        self.layer_sizes = tuple(int(s) for s in layer_sizes)
+        self.intra = intra
+        self.coordinated = coordinated
+
+    @classmethod
+    def lower(cls, plans, layer_sizes: Sequence[int]) -> "DevicePlan":
+        """Lower one ``ExecutionPlan`` (-> unbatched) or a sequence of
+        same-shape plans (-> batched, leading batch axis) into device
+        tensors. ``layer_sizes[k-1]`` is layer k's point count (the
+        ``n_centers`` of the config) — partial coordinated orders are
+        completed to it."""
+        import jax.numpy as jnp
+
+        single = isinstance(plans, ExecutionPlan)
+        plan_list = [plans] if single else list(plans)
+        if not plan_list:
+            raise ValueError("DevicePlan.lower needs at least one plan")
+        layer_sizes = tuple(int(s) for s in layer_sizes)
+        if any(p.n_layers != len(layer_sizes) for p in plan_list):
+            raise ValueError(
+                f"plan layer count does not match layer_sizes "
+                f"{layer_sizes}")
+        orders, inverses = [], []
+        for k, n in enumerate(layer_sizes, start=1):
+            per = [complete_order(np.asarray(p.order_of(k)), n, k)
+                   for p in plan_list]
+            inv = [inverse_permutation(o) for o in per]
+            if single:
+                orders.append(jnp.asarray(per[0], jnp.int32))
+                inverses.append(jnp.asarray(inv[0], jnp.int32))
+            else:
+                orders.append(jnp.asarray(np.stack(per), jnp.int32))
+                inverses.append(jnp.asarray(np.stack(inv), jnp.int32))
+        p0 = plan_list[0]
+        return cls(orders, inverses, layer_sizes,
+                   intra=p0.intra, coordinated=p0.coordinated)
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.orders)
+
+    @property
+    def batched(self) -> bool:
+        return self.orders[0].ndim == 2
+
+    @property
+    def batch_size(self) -> int | None:
+        return int(self.orders[0].shape[0]) if self.batched else None
+
+    def order_of(self, layer: int):
+        if not 1 <= layer <= self.n_layers:
+            raise ValueError(
+                f"layer must be in 1..{self.n_layers} (1-based SA layer "
+                f"index); got {layer}")
+        return self.orders[layer - 1]
+
+    def inverse_of(self, layer: int):
+        if not 1 <= layer <= self.n_layers:
+            raise ValueError(
+                f"layer must be in 1..{self.n_layers} (1-based SA layer "
+                f"index); got {layer}")
+        return self.inverses[layer - 1]
+
+    # -- pytree protocol (sizes & provenance are static aux data) -----------
+    def tree_flatten(self):
+        return ((self.orders, self.inverses),
+                (self.layer_sizes, self.intra, self.coordinated))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+
+def _register_device_plan() -> None:
+    import jax
+    jax.tree_util.register_pytree_node_class(DevicePlan)
+
+
+_register_device_plan()
 
 
 #: Above this many points ``greedy_nn_order`` recomputes distances per step

@@ -16,14 +16,16 @@ in ``ops.py``; they are validated on CPU with ``interpret=True`` and target
 TPU (BlockSpec VMEM tiling, 128-aligned) for deployment.
 """
 from .fused_mlp import reram_mlp_fused, reram_mlp_fused_batched
-from .ops import (aggregate_diff, count_dma_elisions, encode_planes, fps,
-                  fps_update, on_tpu, quantize_tensor, reram_linear)
+from .ops import (aggregate_diff, aggregate_diff_batched,
+                  count_dma_elisions, encode_planes, fps, fps_update, on_tpu,
+                  quantize_tensor, reram_linear)
 from .program import (FUSED_MODES, CrossbarProgram, FusedPlan, build_program,
                       fused_vmem_bytes, plan_fused_mlp)
 from .reram_mlp import reram_matmul_int
 
 __all__ = [
     "CrossbarProgram", "FUSED_MODES", "FusedPlan", "aggregate_diff",
+    "aggregate_diff_batched",
     "build_program", "count_dma_elisions", "encode_planes", "fps",
     "fps_update", "fused_vmem_bytes", "on_tpu", "plan_fused_mlp",
     "quantize_tensor", "reram_linear", "reram_matmul_int", "reram_mlp_fused",

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .aggregate import aggregate_diff
+from .aggregate import aggregate_diff, aggregate_diff_batched
 from .fps_update import fps_update
 from .program import encode_planes, quantize_tensor
 from .reram_mlp import reram_matmul_int
@@ -25,7 +25,8 @@ from .ref import combine_planes
 
 __all__ = [
     "on_tpu", "encode_planes", "quantize_tensor", "reram_linear",
-    "aggregate_diff", "fps_update", "fps", "count_dma_elisions",
+    "aggregate_diff", "aggregate_diff_batched", "fps_update",
+    "fps", "count_dma_elisions",
 ]
 
 

@@ -330,7 +330,8 @@ def plan_fused_mlp(program: "CrossbarProgram", m_rows: int, *,
                    mode: str | None = None,
                    block_m: int = CROSSBAR, block_n: int | None = None,
                    block_k: int | None = None,
-                   vmem_budget: int = VMEM_BUDGET_BYTES) -> FusedPlan:
+                   vmem_budget: int | None = None,
+                   policy=None) -> FusedPlan:
     """Pick the fused-kernel launch geometry for ``m_rows`` activation rows.
 
     With everything unpinned the selector walks :data:`FUSED_MODES` in
@@ -347,6 +348,16 @@ def plan_fused_mlp(program: "CrossbarProgram", m_rows: int, *,
        rows), and the fallback recorded with ``fits_budget=False`` when
        nothing fits.
 
+    ``policy`` (a :class:`repro.core.policy.PlanPolicy`, duck-typed via
+    its ``fused_cost``/``vmem_budget`` members) replaces the VMEM-fit-only
+    preference walk with a roofline choice: among every dataflow that fits
+    the budget (each at its own best tile edge), take the one with the
+    lowest predicted cost — ``max`` of MXU-bound cycles and predicted HBM
+    bytes over bandwidth, i.e. the mode is picked on predicted
+    bytes-per-cycle, not just fit. When no explicit ``vmem_budget`` is
+    given the policy's own budget applies. Cost ties keep the preference
+    order above, so a compute-bound shape resolves exactly as before.
+
     Pass ``mode=`` to pin the dataflow (its largest fitting edge is still
     auto-picked), and ``block_n``/``block_k`` to pin tile edges explicitly
     (still validated against the crossbar geometry). For backward
@@ -355,6 +366,9 @@ def plan_fused_mlp(program: "CrossbarProgram", m_rows: int, *,
     'tiled'). Pure static arithmetic — safe to call at trace time."""
     d = program.d_pad
     p = program.n_planes
+    if vmem_budget is None:
+        vmem_budget = (getattr(policy, "vmem_budget", None)
+                       if policy is not None else None) or VMEM_BUDGET_BYTES
     if block_m % 8 != 0 or block_m <= 0:
         raise ValueError(f"block_m={block_m} must be a positive multiple "
                          f"of 8 (f32 sublane tiling)")
@@ -366,6 +380,20 @@ def plan_fused_mlp(program: "CrossbarProgram", m_rows: int, *,
         return fused_vmem_bytes(d, p, m_pad, block_m, bn, mode=md)
 
     whole = bytes_at("whole", d)
+    if block_k is None:
+        bk = min(d, 4 * CROSSBAR)
+    else:
+        bk = block_k
+        if bk <= 0 or bk % CROSSBAR != 0 or d % bk != 0:
+            raise ValueError(f"block_k={bk} must be a multiple of "
+                             f"{CROSSBAR} dividing d_pad={d}")
+
+    def plan_at(md, bn):
+        return FusedPlan(
+            d_pad=d, m_pad=m_pad, block_m=block_m, block_n=bn, block_k=bk,
+            vmem_bytes=bytes_at(md, bn), whole_bytes=whole,
+            budget=vmem_budget, mode=md, n_planes=p)
+
     if block_n is not None:
         bn = block_n
         if bn <= 0 or bn % CROSSBAR != 0 or d % bn != 0:
@@ -384,24 +412,24 @@ def plan_fused_mlp(program: "CrossbarProgram", m_rows: int, *,
                                        lambda c: bytes_at(mode, c),
                                        vmem_budget) or CROSSBAR
     else:
-        # auto: first mode in preference order with a fitting tile edge;
-        # fall through to the smallest M-tiled footprint if nothing fits.
-        mode, bn = "mtiled", CROSSBAR
+        # auto: each mode's largest fitting tile edge is a candidate; a
+        # policy ranks the candidates on predicted roofline cycles, the
+        # default takes the first in preference order. The smallest
+        # M-tiled footprint is the nothing-fits fallback
+        # (fits_budget=False).
+        fitting: list[tuple[str, int]] = []
         for cand_mode in ("whole", "wstat", "tiled", "mtiled"):
             found = _largest_fitting_edge(
                 d, _edge_candidates(cand_mode, d),
                 lambda c: bytes_at(cand_mode, c), vmem_budget)
             if found is not None:
-                mode, bn = cand_mode, found
-                break
-    if block_k is None:
-        bk = min(d, 4 * CROSSBAR)
-    else:
-        bk = block_k
-        if bk <= 0 or bk % CROSSBAR != 0 or d % bk != 0:
-            raise ValueError(f"block_k={bk} must be a multiple of "
-                             f"{CROSSBAR} dividing d_pad={d}")
-    return FusedPlan(
-        d_pad=d, m_pad=m_pad, block_m=block_m, block_n=bn, block_k=bk,
-        vmem_bytes=bytes_at(mode, bn), whole_bytes=whole,
-        budget=vmem_budget, mode=mode, n_planes=p)
+                fitting.append((cand_mode, found))
+        if not fitting:
+            mode, bn = "mtiled", CROSSBAR
+        elif policy is None:
+            mode, bn = fitting[0]
+        else:
+            mode, bn = min(
+                enumerate(fitting),
+                key=lambda t: (policy.fused_cost(plan_at(*t[1])), t[0]))[1]
+    return plan_at(mode, bn)

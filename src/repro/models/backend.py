@@ -3,8 +3,8 @@
 This module is the single entry point for running PointNet++ on the ReRAM
 twin. It replaces the implicit-kwarg backend selection that used to thread
 ``matmul=`` / ``program=`` through ``forward``/``batched_forward``/
-``loss_fn`` (kept as deprecated shims in ``repro.models.pointnet2``; see
-DESIGN.md §9 for the migration table).
+``loss_fn`` (shims removed one release after PR 3; DESIGN.md §9 keeps the
+migration table as the historical record).
 
 Lifecycle — the same three phases as the accelerator:
 
@@ -13,18 +13,28 @@ Lifecycle — the same three phases as the accelerator:
             work (the 'reram-fused' backend quantizes + plane-encodes every
             MLP into a :class:`~repro.kernels.CrossbarProgram` here, exactly
             once — crossbar programming).
-  plan    : ``schedule=`` picks the execution order (paper Algorithm 1).
-            ``"baseline"`` is plain layer-by-layer index order; any other
-            preset / ``{"intra": ..., "coordinated": ...}`` spec / prebuilt
-            :class:`~repro.core.schedule.ExecutionPlan` routes execution
-            through the plan.
+  plan    : ``policy=`` hands both scheduling decisions to a
+            :class:`~repro.core.policy.PlanPolicy` cost model (fused
+            dataflow by predicted HBM bytes-per-cycle, intra order by
+            predicted DMA elisions); ``schedule=`` is the thin adapter
+            that pins the order instead (paper Algorithm 1): ``"baseline"``
+            is plain layer-by-layer index order; any other preset /
+            ``{"intra": ..., "coordinated": ...}`` spec routes execution
+            through a per-cloud plan, and a prebuilt
+            :class:`~repro.core.schedule.ExecutionPlan` is lowered HERE,
+            once, into a jit-safe device-tensor
+            :class:`~repro.core.schedule.DevicePlan` (which is also
+            accepted directly, possibly batched).
   execute : ``CompiledModel.forward``/``batched_forward``/``loss_fn``/
             ``eval_step``. Under a plan, each SA layer runs its centers in
             ``plan.order_of(k)`` and the gather stage goes through the
             scalar-prefetch ``aggregate_diff`` kernel with plan-ordered
             indices — consecutive grid steps hitting the same feature row
             elide the HBM→VMEM copy, so the paper's reordering directly
-            removes DMAs. Results are scattered back to index order after
+            removes DMAs. ``batched_forward`` stacks the per-cloud plans
+            into ONE batched DevicePlan and issues a single batch-gridded
+            ``aggregate_diff_batched`` launch per SA layer (no per-cloud
+            Python loop). Results are scattered back to index order after
             the per-center max reduction (rows are independent and the
             reduction is a max), so logits are bitwise invariant to the
             order; only the DMA traffic changes.
@@ -57,11 +67,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.schedule import ExecutionPlan, MODE_PRESETS, build_plan
+from repro.core.policy import PlanPolicy
+from repro.core.schedule import (DevicePlan, ExecutionPlan, MODE_PRESETS,
+                                 build_plan, complete_order,
+                                 inverse_permutation)
 from repro.core.workload import PointNetConfig, PointNetWorkload
-from repro.kernels import (aggregate_diff, count_dma_elisions, plan_fused_mlp,
-                           reram_linear, reram_mlp_fused,
-                           reram_mlp_fused_batched)
+from repro.kernels import (aggregate_diff, aggregate_diff_batched,
+                           count_dma_elisions, plan_fused_mlp, reram_linear,
+                           reram_mlp_fused, reram_mlp_fused_batched)
 from repro.models import pointnet2 as _pn
 
 __all__ = [
@@ -98,6 +111,12 @@ def register_backend(name: str) -> Callable[[type], type]:
 
 
 def available_backends() -> list[str]:
+    """Registered backend names, deterministically sorted (lexicographic —
+    NOT registration order, so the listing is stable no matter which
+    modules registered entries or in what order). Shadowing rule: the
+    registry is name-keyed and latest-wins — ``register_backend`` on an
+    existing name replaces that entry in place (the name keeps its sorted
+    position; the previous class is simply no longer reachable by it)."""
     return sorted(_REGISTRY)
 
 
@@ -117,6 +136,10 @@ class Backend:
     #: True when ``apply_mlp_batched`` folds the batch into the kernel grid
     #: (the compiled model then vmaps only the geometry, never the kernel).
     batched_in_grid = False
+    #: :class:`~repro.core.policy.PlanPolicy` stamped by ``compile_model``
+    #: (None when compiled without one). Backends with tunable dataflows
+    #: consult it for their launch-geometry decisions.
+    policy: PlanPolicy | None = None
 
     def __init__(self, params: Params, config: PointNetConfig):
         self.params = params
@@ -190,21 +213,39 @@ class ReramFusedBackend(Backend):
         self.block_n = block_n
         self.block_k = block_k
         self.interpret = interpret
+        self._plan_cache: dict = {}
 
     def _prog(self, key):
         return (self.program["head"] if key == "head"
                 else self.program["sa"][key[1]])
 
+    def _fused_plan(self, key, m_rows: int):
+        """The launch geometry for MLP ``key`` at ``m_rows`` activation
+        rows — through the compiled policy's roofline selection when one
+        is stamped, else ``plan_fused_mlp``'s VMEM-fit preference walk.
+        Cached: one decision per (MLP, shape), made on host at compile/
+        first-trace time and pinned into the kernel as static args."""
+        ck = (key, int(m_rows))
+        if ck not in self._plan_cache:
+            self._plan_cache[ck] = plan_fused_mlp(
+                self._prog(key), int(m_rows), mode=self.mode,
+                block_n=self.block_n, block_k=self.block_k,
+                policy=self.policy)
+        return self._plan_cache[ck]
+
     def apply_mlp(self, key, x, *, final_relu=True):
+        fp = self._fused_plan(key, int(np.prod(x.shape[:-1], dtype=np.int64)))
         return reram_mlp_fused(x, self._prog(key), final_relu=final_relu,
-                               mode=self.mode, block_n=self.block_n,
-                               block_k=self.block_k,
+                               mode=fp.mode, block_n=fp.block_n,
+                               block_k=fp.block_k,
                                interpret=self.interpret)
 
     def apply_mlp_batched(self, key, x, *, final_relu=True):
+        fp = self._fused_plan(key,
+                              int(np.prod(x.shape[1:-1], dtype=np.int64)))
         return reram_mlp_fused_batched(
-            x, self._prog(key), final_relu=final_relu, mode=self.mode,
-            block_n=self.block_n, block_k=self.block_k,
+            x, self._prog(key), final_relu=final_relu, mode=fp.mode,
+            block_n=fp.block_n, block_k=fp.block_k,
             interpret=self.interpret)
 
     def stats(self) -> dict:
@@ -215,15 +256,14 @@ class ReramFusedBackend(Backend):
         plans = {}
         for i, spec in enumerate(self.config.layers):
             rows = spec.n_centers * spec.n_neighbors
-            plans[f"sa{i}"] = self._plan_row(self.program["sa"][i], rows)
-        plans["head"] = self._plan_row(self.program["head"], 1)
+            plans[f"sa{i}"] = self._plan_row(("sa", i), rows)
+        plans["head"] = self._plan_row("head", 1)
         return {"program_bytes": sum(nbytes.values()),
                 "program_bytes_per_mlp": nbytes,
                 "fused_plan": plans}
 
-    def _plan_row(self, prog, rows):
-        fp = plan_fused_mlp(prog, rows, mode=self.mode, block_n=self.block_n,
-                            block_k=self.block_k)
+    def _plan_row(self, key, rows):
+        fp = self._fused_plan(key, rows)
         return {"mode": fp.mode,
                 "block_n": fp.block_n, "vmem_bytes": fp.vmem_bytes,
                 "fits_budget": fp.fits_budget,
@@ -264,15 +304,28 @@ class ReramFusedWStatBackend(ReramFusedBackend):
 # schedule canonicalization
 # ---------------------------------------------------------------------------
 
-def _canonical_schedule(schedule):
-    """-> (spec_dict, plan_or_None, planned: bool). ``spec_dict`` always has
-    'intra' and 'coordinated'; ``planned`` is False only for the plain
-    layer-by-layer index-order fast path (== the 'baseline' preset)."""
+def _canonical_schedule(schedule, config: PointNetConfig):
+    """-> (spec_dict, host_plan_or_None, device_plan_or_None, planned).
+    ``spec_dict`` always has 'intra' and 'coordinated'; ``planned`` is
+    False only for the plain layer-by-layer index-order fast path (== the
+    'baseline' preset). A prebuilt ``ExecutionPlan`` is lowered to a
+    :class:`DevicePlan` HERE — once, at compile time — so planned
+    execution runs it as device arrays under jit; a prebuilt
+    ``DevicePlan`` (possibly batched) passes straight through."""
+    sizes = tuple(s.n_centers for s in config.layers)
     if schedule is None:
         schedule = "baseline"
-    if isinstance(schedule, ExecutionPlan):
+    if isinstance(schedule, DevicePlan):
+        if schedule.layer_sizes != sizes:
+            raise ValueError(
+                f"DevicePlan layer sizes {schedule.layer_sizes} do not "
+                f"match config layers {sizes}")
         return ({"intra": schedule.intra,
-                 "coordinated": schedule.coordinated}, schedule, True)
+                 "coordinated": schedule.coordinated}, None, schedule, True)
+    if isinstance(schedule, ExecutionPlan):
+        dplan = DevicePlan.lower(schedule, sizes)
+        return ({"intra": schedule.intra,
+                 "coordinated": schedule.coordinated}, schedule, dplan, True)
     if isinstance(schedule, Mapping):
         spec = dict(schedule)
         unknown = set(spec) - {"intra", "coordinated"}
@@ -284,41 +337,17 @@ def _canonical_schedule(schedule):
         if spec["intra"] not in ("index", "greedy", "morton"):
             raise ValueError(f"unknown intra mode {spec['intra']!r}; "
                              f"expected 'index', 'greedy' or 'morton'")
-        return spec, None, True
+        return spec, None, None, True
     if isinstance(schedule, str):
         if schedule not in MODE_PRESETS:
             raise ValueError(
                 f"unknown schedule {schedule!r}; expected one of "
                 f"{sorted(MODE_PRESETS)}, a {{'intra', 'coordinated'}} "
-                f"mapping, or an ExecutionPlan")
-        return dict(MODE_PRESETS[schedule]), None, schedule != "baseline"
-    raise TypeError(f"schedule must be a preset name, a mapping, or an "
-                    f"ExecutionPlan; got {type(schedule).__name__}")
-
-
-def _inverse_permutation(order: np.ndarray) -> np.ndarray:
-    inv = np.empty_like(order)
-    inv[order] = np.arange(order.shape[0], dtype=order.dtype)
-    return inv
-
-
-def _complete_order(order: np.ndarray, n: int, layer: int) -> np.ndarray:
-    """A coordinated plan schedules a lower-layer point only when some
-    last-layer receptive field needs it; points outside every field are
-    dead compute for the network output and absent from the order. The
-    dense kernels still run all ``n`` rows (the fused MLP's quant scales
-    are global over the launch), so append the orphans at the tail — after
-    every scheduled point, changing no scheduled DMA — to complete the
-    permutation."""
-    if order.shape[0] == n:
-        return order
-    if order.shape[0] > n or np.unique(order).shape[0] != order.shape[0] \
-            or (order.size and (order.min() < 0 or order.max() >= n)):
-        raise ValueError(
-            f"ExecutionPlan layer-{layer} order has {order.shape[0]} points "
-            f"(distinct in [0, {n})) expected; got an incompatible order")
-    missing = np.setdiff1d(np.arange(n, dtype=order.dtype), order)
-    return np.concatenate([order, missing])
+                f"mapping, an ExecutionPlan, or a DevicePlan")
+        return dict(MODE_PRESETS[schedule]), None, None, schedule != "baseline"
+    raise TypeError(f"schedule must be a preset name, a mapping, an "
+                    f"ExecutionPlan, or a DevicePlan; got "
+                    f"{type(schedule).__name__}")
 
 
 # ---------------------------------------------------------------------------
@@ -327,15 +356,20 @@ def _complete_order(order: np.ndarray, n: int, layer: int) -> np.ndarray:
 
 class CompiledModel:
     """The executable returned by :func:`compile_model`. Holds a programmed
-    backend plus a schedule; exposes the whole old surface as methods."""
+    backend plus a compiled schedule (a :class:`DevicePlan` and/or the
+    policy that builds one per workload); exposes the whole old surface as
+    methods."""
 
     def __init__(self, backend: Backend, config: PointNetConfig,
                  schedule_spec: dict, plan: ExecutionPlan | None,
-                 planned: bool):
+                 planned: bool, device_plan: DevicePlan | None = None,
+                 policy: PlanPolicy | None = None):
         self.backend = backend
         self.config = config
         self._spec = schedule_spec
-        self._plan = plan          # user-supplied plan, reused as-is
+        self._plan = plan          # user-supplied host plan (stats only)
+        self._dplan = device_plan  # compile-time lowered plan, if any
+        self._policy = policy
         self._planned = planned
         self._jit_eval = None
         self._last_dma: dict | None = None
@@ -349,8 +383,21 @@ class CompiledModel:
     @property
     def schedule(self) -> dict:
         """The canonical ``{'intra': ..., 'coordinated': ...}`` spec (round-
-        trips ``MODE_PRESETS`` names passed to ``compile_model``)."""
+        trips ``MODE_PRESETS`` names passed to ``compile_model``). Under a
+        policy, ``intra`` is ``'auto'`` — the cost model picks it per
+        workload."""
         return dict(self._spec)
+
+    @property
+    def policy(self) -> PlanPolicy | None:
+        return self._policy
+
+    @property
+    def device_plan(self) -> DevicePlan | None:
+        """The compile-time-lowered :class:`DevicePlan` (None when the
+        schedule is per-cloud: spec/policy-driven plans are built from
+        each cloud's own geometry at call time)."""
+        return self._dplan
 
     # -- execution ----------------------------------------------------------
 
@@ -363,10 +410,12 @@ class CompiledModel:
     def batched_forward(self, clouds: jnp.ndarray) -> jnp.ndarray:
         """Batch (B, N, 3) -> logits (B, n_classes). Grid-batched backends
         get ONE kernel launch per MLP for the whole batch (geometry only is
-        vmapped); others vmap the single-cloud forward. Under a non-baseline
-        schedule each cloud has its own plan, so clouds run one at a time."""
+        vmapped); others vmap the single-cloud forward. Under a schedule or
+        policy the per-cloud plans are stacked into one batched
+        :class:`DevicePlan` and every SA layer issues ONE batch-gridded
+        ``aggregate_diff_batched`` gather — not a per-cloud Python loop."""
         if self._planned:
-            return jnp.stack([self._forward_planned(c) for c in clouds])
+            return self._batched_forward_planned(clouds)
         if self.backend.batched_in_grid:
             return self._batched_in_grid(clouds)
         return jax.vmap(self._forward_base)(clouds)
@@ -381,10 +430,11 @@ class CompiledModel:
         return nll, acc
 
     def eval_step(self, clouds, labels):
-        """Jit-compiled ``loss_fn`` (cached per compiled model). Plan-driven
-        schedules build their plan on host per cloud and therefore run
-        eagerly — only the kernels underneath are jitted."""
-        if self._planned:
+        """Jit-compiled ``loss_fn`` (cached per compiled model). Schedules
+        that build their plan on host per cloud (preset/spec/policy) run
+        eagerly — only the kernels underneath are jitted; a compile-time
+        :class:`DevicePlan` is device-resident and jits like baseline."""
+        if self._planned and self._dplan is None:
             return self.loss_fn(clouds, labels)
         if self._jit_eval is None:
             self._jit_eval = jax.jit(self.loss_fn)
@@ -402,14 +452,22 @@ class CompiledModel:
         via ``count_dma_elisions`` with a ``window``-row VMEM working set."""
         s = {"backend": self.backend_name, "schedule": self.schedule,
              "planned": self._planned}
+        if self._policy is not None:
+            s["policy"] = self._policy
         s.update(self.backend.stats())
         dma = None
         if cloud is not None or workload is not None:
             if workload is None:
                 workload = PointNetWorkload.build(
                     np.asarray(cloud, np.float64), self.config)
-            plan = (self._plan if self._plan is not None
-                    else build_plan(workload, **self._spec))
+            if self._plan is not None:
+                plan = self._plan
+            elif self._dplan is not None:
+                plan = self._dplan
+            elif self._policy is not None:
+                plan = self._policy.build_plan(workload)
+            else:
+                plan = build_plan(workload, **self._spec)
             dma = self._dma_report(plan,
                                    [np.asarray(nb)
                                     for nb in workload.neighbors[1:]],
@@ -426,12 +484,26 @@ class CompiledModel:
     @staticmethod
     def _dma_report(plan, neighbors, window, streams=None) -> dict:
         """Per-layer + total elision counts for the plan-ordered neighbor
-        index streams that drive ``aggregate_diff``."""
+        index streams that drive the ``aggregate_diff`` gathers.
+        ``streams[k-1]`` is a list of one array per cloud (a batched plan
+        contributes one stream per batch row; counts never chain across
+        cloud boundaries) — layer entries aggregate over the batch."""
         if streams is None:
-            streams = [nb[_complete_order(np.asarray(plan.order_of(k)),
-                                          nb.shape[0], k)]
-                       for k, nb in enumerate(neighbors, start=1)]
-        layers = [count_dma_elisions(st, window=window) for st in streams]
+            streams = []
+            for k, nb in enumerate(neighbors, start=1):
+                order = np.asarray(plan.order_of(k))
+                orders = order[None] if order.ndim == 1 else order
+                streams.append([nb[complete_order(o, nb.shape[0], k)]
+                                for o in orders])
+        layers = []
+        for per_cloud in streams:
+            counts = [count_dma_elisions(st, window=window)
+                      for st in per_cloud]
+            steps = sum(c["steps"] for c in counts)
+            elided = sum(c["elided"] for c in counts)
+            layers.append({"steps": steps, "elided": elided,
+                           "dma": steps - elided,
+                           "elision_rate": elided / max(1, steps)})
         steps = sum(l["steps"] for l in layers)
         elided = sum(l["elided"] for l in layers)
         return {"window": window, "layers": layers, "steps": steps,
@@ -470,20 +542,14 @@ class CompiledModel:
         g = jnp.max(feats, axis=1)                       # global max pool
         return self.backend.apply_mlp_batched("head", g, final_relu=False)
 
-    def _forward_planned(self, cloud):
-        """Plan-driven execution. Pass 1 computes the geometry (same FPS/kNN
-        as the base path); the plan is built from exactly that geometry, so
-        ``order_of(k)`` permutes exactly the rows being gathered. Pass 2
-        runs each SA layer's centers in plan order, gathering neighbor
-        differences through the scalar-prefetch ``aggregate_diff`` kernel —
-        the plan-ordered index stream is what elides DMAs — then scatters
-        the per-center max back to index order, which makes the logits
-        bitwise independent of the order."""
-        cfg = self.config
-        feats = _pn.lift_features(cloud, cfg.layers[0].in_features)
+    def _geometry_pass(self, cloud):
+        """Pass 1 of planned execution: the same FPS/kNN geometry as the
+        base path, kept as explicit per-layer tensors so the plan (built
+        from exactly this geometry) permutes exactly the rows being
+        gathered."""
         pts_list, ctr_list, nbr_list = [cloud], [None], [None]
         pts = cloud
-        for spec in cfg.layers:
+        for spec in self.config.layers:
             centers = _pn.farthest_point_sample(pts, spec.n_centers)
             c_pts = pts[centers]
             nbr = _pn.knn(c_pts, pts, spec.n_neighbors)
@@ -491,41 +557,126 @@ class CompiledModel:
             ctr_list.append(centers)
             nbr_list.append(nbr)
             pts = c_pts
+        return pts_list, ctr_list, nbr_list
 
-        plan = self._plan_for(pts_list, ctr_list, nbr_list)
+    def _forward_planned(self, cloud):
+        """Plan-driven execution. Pass 2 runs each SA layer's centers in
+        plan order, gathering neighbor differences through the
+        scalar-prefetch ``aggregate_diff`` kernel — the plan-ordered index
+        stream is what elides DMAs — then scatters the per-center max back
+        to index order, which makes the logits bitwise independent of the
+        order. The schedule itself is a :class:`DevicePlan`: lowered once
+        at compile time when prebuilt (then this whole function jits), or
+        lowered here from the host plan the spec/policy builds for this
+        cloud's geometry."""
+        cfg = self.config
+        feats = _pn.lift_features(cloud, cfg.layers[0].in_features)
+        pts_list, ctr_list, nbr_list = self._geometry_pass(cloud)
+        dplan = self._device_plan_for(pts_list, ctr_list, nbr_list)
+        if dplan.batched:
+            raise ValueError("compile_model was given a batched DevicePlan; "
+                             "use batched_forward for it")
         tracing = isinstance(cloud, jax.core.Tracer)
         streams = []
-        for k, spec in enumerate(cfg.layers, start=1):
-            order = _complete_order(np.asarray(plan.order_of(k)),
-                                    spec.n_centers, k)
-            inv = _inverse_permutation(order)
-            nbr_o = nbr_list[k][order].astype(jnp.int32)
-            ctr_o = ctr_list[k][order].astype(jnp.int32)
+        for k in range(1, cfg.n_layers + 1):
+            order = dplan.order_of(k)
+            inv = dplan.inverse_of(k)
+            nbr_o = jnp.take(nbr_list[k].astype(jnp.int32), order, axis=0)
+            ctr_o = jnp.take(ctr_list[k].astype(jnp.int32), order, axis=0)
             if not tracing:
-                streams.append(np.asarray(nbr_o))
+                streams.append([np.asarray(nbr_o)])
             diff = aggregate_diff(feats, nbr_o, ctr_o)   # plan-ordered gather
             h = self.backend.apply_mlp(("sa", k - 1), diff)
             out = jnp.max(h, axis=1)                     # reduction over K
-            feats = out[inv]                             # back to index order
+            feats = jnp.take(out, inv, axis=0)           # back to index order
         if not tracing:
             self._last_dma = self._dma_report(None, None, 72, streams=streams)
         g = jnp.max(feats, axis=0)
         return self.backend.apply_mlp("head", g, final_relu=False)
 
-    def _plan_for(self, pts_list, ctr_list, nbr_list) -> ExecutionPlan:
-        if self._plan is not None:
-            return self._plan
+    def _batched_forward_planned(self, clouds):
+        """Batched plan-driven execution — the per-cloud Python loop folded
+        into single batch-gridded launches. Geometry still runs per cloud
+        (its concrete points are what the host plans are built from), but
+        the per-cloud plans are stacked into ONE batched
+        :class:`DevicePlan` and every SA layer then issues exactly one
+        ``aggregate_diff_batched`` gather and one batched MLP apply for
+        the whole batch. Same arithmetic per row as the per-cloud path, so
+        logits are bitwise equal to ``stack([forward(c) for c in clouds])``
+        (tested per schedule)."""
+        cfg = self.config
+        batch = clouds.shape[0]
+        geoms = [self._geometry_pass(clouds[b]) for b in range(batch)]
+        dplan = self._device_plan_for(*geoms[0], batch_geoms=geoms)
+        if dplan.batched and dplan.batch_size != batch:
+            raise ValueError(
+                f"batched DevicePlan is for batch {dplan.batch_size}, "
+                f"got {batch} clouds")
+        tracing = isinstance(clouds, jax.core.Tracer)
+        feats = jnp.stack([_pn.lift_features(clouds[b],
+                                             cfg.layers[0].in_features)
+                           for b in range(batch)])
+        streams = []
+        for k in range(1, cfg.n_layers + 1):
+            order = dplan.order_of(k)
+            inv = dplan.inverse_of(k)
+            if not dplan.batched:                 # one plan shared batch-wide
+                order = jnp.broadcast_to(order, (batch,) + order.shape)
+                inv = jnp.broadcast_to(inv, (batch,) + inv.shape)
+            nbr_k = jnp.stack([g[2][k] for g in geoms]).astype(jnp.int32)
+            ctr_k = jnp.stack([g[1][k] for g in geoms]).astype(jnp.int32)
+            nbr_o = jnp.take_along_axis(nbr_k, order[:, :, None], axis=1)
+            ctr_o = jnp.take_along_axis(ctr_k, order, axis=1)
+            if not tracing:
+                streams.append(list(np.asarray(nbr_o)))
+            diff = aggregate_diff_batched(feats, nbr_o, ctr_o)  # ONE launch
+            if self.backend.batched_in_grid:
+                h = self.backend.apply_mlp_batched(("sa", k - 1), diff)
+            else:
+                h = jax.vmap(
+                    lambda d, key=("sa", k - 1):
+                    self.backend.apply_mlp(key, d))(diff)
+            out = jnp.max(h, axis=2)                     # reduction over K
+            feats = jnp.take_along_axis(out, inv[:, :, None], axis=1)
+        if not tracing:
+            self._last_dma = self._dma_report(None, None, 72, streams=streams)
+        g = jnp.max(feats, axis=1)                       # global max pool
+        if self.backend.batched_in_grid:
+            return self.backend.apply_mlp_batched("head", g, final_relu=False)
+        return jax.vmap(
+            lambda v: self.backend.apply_mlp("head", v, final_relu=False))(g)
+
+    def _host_plan_for(self, pts_list, ctr_list, nbr_list) -> ExecutionPlan:
+        """Build the host ``ExecutionPlan`` for one cloud's geometry via
+        the policy (cost-model intra selection) or the fixed spec."""
         if any(isinstance(p, jax.core.Tracer) for p in pts_list):
             raise TypeError(
-                "compile_model(schedule=...) builds its ExecutionPlan on the "
-                "host and cannot run under jit/vmap tracing; jit the "
-                "'baseline' schedule, or pass a prebuilt ExecutionPlan")
+                "compile_model(schedule=...)/compile_model(policy=...) "
+                "builds its ExecutionPlan on the host and cannot run under "
+                "jit/vmap tracing; jit the 'baseline' schedule, or pass a "
+                "prebuilt ExecutionPlan/DevicePlan")
         wl = PointNetWorkload(
             config=self.config,
             points=[np.asarray(p, np.float64) for p in pts_list],
             centers=[None] + [np.asarray(c) for c in ctr_list[1:]],
             neighbors=[None] + [np.asarray(nb) for nb in nbr_list[1:]])
+        if self._policy is not None and "auto" in self._spec.values():
+            return self._policy.build_plan(wl)
         return build_plan(wl, **self._spec)
+
+    def _device_plan_for(self, pts_list, ctr_list, nbr_list, *,
+                         batch_geoms=None) -> DevicePlan:
+        """The :class:`DevicePlan` that drives execution: the compile-time
+        one when the user passed a prebuilt plan, else per-cloud host plans
+        lowered (and, for a batch, stacked) here."""
+        if self._dplan is not None:
+            return self._dplan
+        sizes = tuple(s.n_centers for s in self.config.layers)
+        if batch_geoms is None:
+            return DevicePlan.lower(
+                self._host_plan_for(pts_list, ctr_list, nbr_list), sizes)
+        return DevicePlan.lower(
+            [self._host_plan_for(*g) for g in batch_geoms], sizes)
 
 
 # ---------------------------------------------------------------------------
@@ -533,7 +684,8 @@ class CompiledModel:
 # ---------------------------------------------------------------------------
 
 def compile_model(params: Params, config: PointNetConfig, *,
-                  backend: str = "float", schedule="baseline",
+                  backend: str = "float", schedule=None,
+                  policy: PlanPolicy | None = None,
                   **backend_opts) -> CompiledModel:
     """Compile PointNet++ ``params`` for execution.
 
@@ -541,12 +693,23 @@ def compile_model(params: Params, config: PointNetConfig, *,
                'reram-fused' (weight-stationary fused kernels), or anything
                added with :func:`register_backend`. ``backend_opts`` go to
                the backend constructor (e.g. ``program=``, ``block_n=``).
-    schedule : 'baseline' (plain layer-by-layer index order, jit-friendly),
-               a ``MODE_PRESETS`` name ('pointer-1', 'pointer-12',
+    policy   : a :class:`~repro.core.policy.PlanPolicy` — the cost model
+               that makes both scheduling decisions at compile time: the
+               fused backends route their dataflow choice through its
+               roofline selector (predicted HBM bytes-per-cycle, not just
+               VMEM fit), and — unless ``schedule`` pins one — the
+               intra-layer order is picked per workload by predicted DMA
+               elisions.
+    schedule : the thin adapter predating ``policy=``: None/'baseline'
+               (plain layer-by-layer index order, jit-friendly), a
+               ``MODE_PRESETS`` name ('pointer-1', 'pointer-12',
                'pointer', 'pointer-morton'), an ``{'intra', 'coordinated'}``
-               mapping, or a prebuilt :class:`ExecutionPlan`. Non-baseline
-               schedules execute each SA layer in plan order through the
-               ``aggregate_diff`` gather kernel (fewer DMAs, same logits).
+               mapping, a prebuilt :class:`ExecutionPlan` (lowered to a
+               :class:`DevicePlan` here, once), or a prebuilt — possibly
+               batched — :class:`DevicePlan`. Planned schedules execute
+               each SA layer in plan order through the ``aggregate_diff``
+               gather kernels (fewer DMAs, same logits); device plans are
+               jit-safe.
     """
     if not isinstance(backend, str):
         raise TypeError(f"backend must be a registry name string; got "
@@ -556,7 +719,17 @@ def compile_model(params: Params, config: PointNetConfig, *,
     except KeyError:
         raise ValueError(f"unknown backend {backend!r}; registered backends: "
                          f"{available_backends()}") from None
-    spec, plan, planned = _canonical_schedule(schedule)
+    if policy is not None and not isinstance(policy, PlanPolicy):
+        raise TypeError(f"policy must be a PlanPolicy; got "
+                        f"{type(policy).__name__}")
+    if schedule is None and policy is not None:
+        # the policy owns the ordering decision: per-workload intra choice
+        spec = {"intra": "auto", "coordinated": policy.coordinated}
+        plan, dplan, planned = None, None, True
+    else:
+        spec, plan, dplan, planned = _canonical_schedule(schedule, config)
     be = cls(params, config, **backend_opts)
     be.name = backend            # the registry entry actually resolved
-    return CompiledModel(be, config, spec, plan, planned)
+    be.policy = policy           # dataflow decisions consult the cost model
+    return CompiledModel(be, config, spec, plan, planned,
+                         device_plan=dplan, policy=policy)

@@ -158,28 +158,35 @@ def sa_layer(mlp_params, spec: SALayerSpec, points, features):
     return c_pts, out
 
 
-def forward(params: Params, config: PointNetConfig,
-            cloud: jnp.ndarray) -> jnp.ndarray:
+def forward(params: Params, config: PointNetConfig, cloud: jnp.ndarray, *,
+            schedule=None, policy=None) -> jnp.ndarray:
     """Single-cloud float forward: (N, 3) -> logits (n_classes,). Thin
     delegate to :func:`repro.models.backend.compile_model` — the canonical
-    entry point, and the place to pick any other backend or schedule."""
+    entry point, and the place to pick any other backend. ``schedule=`` /
+    ``policy=`` pass straight through (a preset / plan runs the gathers
+    plan-ordered; a :class:`~repro.core.policy.PlanPolicy` picks the order
+    per workload by predicted DMA elisions)."""
     from repro.models.backend import compile_model
-    return compile_model(params, config).forward(cloud)
+    return compile_model(params, config, schedule=schedule,
+                         policy=policy).forward(cloud)
 
 
-def batched_forward(params, config, clouds):
+def batched_forward(params, config, clouds, *, schedule=None, policy=None):
     """Batch of clouds (B, N, 3) -> logits (B, n_classes), float backend.
     Thin delegate to the compiled-model API; backend dispatch (vmapped
     forward for float / per-layer reram, ONE batch-in-grid ``pallas_call``
-    per MLP for the fused backends) lives in
-    ``repro.models.backend.CompiledModel``."""
+    per MLP for the fused backends, ONE batch-gridded
+    ``aggregate_diff_batched`` gather per SA layer under a planned
+    schedule/policy) lives in ``repro.models.backend.CompiledModel``."""
     from repro.models.backend import compile_model
-    return compile_model(params, config).batched_forward(clouds)
+    return compile_model(params, config, schedule=schedule,
+                         policy=policy).batched_forward(clouds)
 
 
-def loss_fn(params, config, clouds, labels):
+def loss_fn(params, config, clouds, labels, *, schedule=None, policy=None):
     from repro.models.backend import compile_model
-    return compile_model(params, config).loss_fn(clouds, labels)
+    return compile_model(params, config, schedule=schedule,
+                         policy=policy).loss_fn(clouds, labels)
 
 
 @functools.partial(jax.jit, static_argnames=("config",))

@@ -331,3 +331,144 @@ def test_public_api_surface():
                  "MODE_PRESETS", "CrossbarProgram", "ExecutionPlan",
                  "register_backend", "available_backends"):
         assert hasattr(repro, name), name
+
+
+# ---------------------------------------------------------------------------
+# batched plan-driven execution (DevicePlan) — the PR-5 tentpole
+# ---------------------------------------------------------------------------
+
+BATCH_SCHEDULES = ({"intra": "index", "coordinated": True},
+                   {"intra": "greedy", "coordinated": True},
+                   {"intra": "morton", "coordinated": True},
+                   "pointer")
+
+
+@pytest.mark.parametrize("backend", ["float", "reram-fused"])
+def test_batched_plan_driven_matches_per_cloud_loop_bitwise(setup, backend):
+    """Acceptance: folding the per-cloud plan loop into batch-gridded
+    launches must reproduce ``stack([forward(c) for c in clouds])``
+    BITWISE for greedy/morton/index schedules — same gathers, same
+    arithmetic per row, only the launch count changes."""
+    cfg, params, cloud = setup
+    clouds = jnp.stack([cloud, cloud * 0.5, cloud * 0.3 + 0.1])
+    for sched in BATCH_SCHEDULES:
+        m = compile_model(params, cfg, backend=backend, schedule=sched)
+        bat = m.batched_forward(clouds)
+        per = jnp.stack([m.forward(c) for c in clouds])
+        assert np.array_equal(np.asarray(bat), np.asarray(per)), \
+            (backend, sched)
+
+
+def test_batched_plan_issues_one_gather_launch_per_layer(setup, monkeypatch):
+    """Acceptance: batched plan-driven execution issues exactly ONE
+    batch-gridded ``aggregate_diff_batched`` pallas_call per SA layer for
+    the whole batch — and never falls back to the per-cloud
+    ``aggregate_diff`` loop."""
+    cfg, params, cloud = setup
+    clouds = jnp.stack([cloud, cloud * 0.5, cloud * 2.0, cloud - 0.2])
+    batched_calls, single_calls = [], []
+    real_batched = backend_mod.aggregate_diff_batched
+    monkeypatch.setattr(
+        backend_mod, "aggregate_diff_batched",
+        lambda *a, **k: (batched_calls.append(a[1].shape),
+                         real_batched(*a, **k))[1])
+    monkeypatch.setattr(
+        backend_mod, "aggregate_diff",
+        lambda *a, **k: single_calls.append(a) or (_ for _ in ()).throw(
+            AssertionError("per-cloud gather in batched path")))
+    m = compile_model(params, cfg, backend="reram-fused", schedule="pointer")
+    m.batched_forward(clouds)
+    assert len(batched_calls) == cfg.n_layers
+    assert not single_calls
+    # each launch carried the whole batch in its grid
+    assert all(shape[0] == 4 for shape in batched_calls)
+
+
+def test_batched_plan_caches_per_layer_aggregated_dma_stats(setup):
+    """After a batched planned forward, stats() reports the measured
+    streams of the WHOLE batch, aggregated per layer (counts never chain
+    across cloud boundaries)."""
+    cfg, params, cloud = setup
+    clouds = jnp.stack([cloud, cloud * 0.5])
+    m = compile_model(params, cfg, schedule="pointer")
+    m.batched_forward(clouds)
+    st = m.stats()
+    assert len(st["dma"]["layers"]) == cfg.n_layers
+    assert st["dma"]["steps"] == 2 * sum(
+        s.n_centers * s.n_neighbors for s in cfg.layers)
+
+
+def test_execution_plan_schedule_is_lowered_and_jits(setup):
+    """A prebuilt ExecutionPlan is lowered ONCE at compile time to a
+    DevicePlan (device-resident int32 orders), after which planned
+    forward/batched_forward/eval_step trace under jax.jit — the host
+    never rebuilds the plan."""
+    cfg, params, cloud = setup
+    wl = PointNetWorkload.build(np.asarray(cloud, np.float64), cfg)
+    plan = build_plan(wl, intra="greedy", coordinated=True)
+    m = compile_model(params, cfg, schedule=plan)
+    dp = m.device_plan
+    assert dp is not None and not dp.batched
+    assert dp.layer_sizes == tuple(s.n_centers for s in cfg.layers)
+    eager = m.forward(cloud)
+    assert bool(jnp.all(eager == compile_model(params, cfg).forward(cloud)))
+    jitted = jax.jit(m.forward)(cloud)
+    np.testing.assert_allclose(np.asarray(jitted), np.asarray(eager),
+                               rtol=1e-5, atol=1e-5)
+    clouds = jnp.stack([cloud, cloud * 0.5])
+    bat = jax.jit(m.batched_forward)(clouds)
+    np.testing.assert_allclose(
+        np.asarray(bat), np.asarray(m.batched_forward(clouds)),
+        rtol=1e-5, atol=1e-5)
+    nll, acc = m.eval_step(clouds, jnp.asarray([1, 7]))  # jitted path
+    assert bool(jnp.isfinite(nll))
+
+
+def test_batched_device_plan_schedule(setup):
+    """compile_model accepts a prebuilt BATCHED DevicePlan: per-cloud
+    orders stacked on a leading axis, one plan row per cloud."""
+    from repro.core import DevicePlan
+    cfg, params, cloud = setup
+    clouds = jnp.stack([cloud, cloud * 0.5])
+    plans = [build_plan(PointNetWorkload.build(np.asarray(c, np.float64),
+                                               cfg),
+                        intra="morton", coordinated=True) for c in clouds]
+    dp = DevicePlan.lower(plans, [s.n_centers for s in cfg.layers])
+    m = compile_model(params, cfg, schedule=dp)
+    base = compile_model(params, cfg)
+    assert np.array_equal(np.asarray(m.batched_forward(clouds)),
+                          np.asarray(base.batched_forward(clouds)))
+    with pytest.raises(ValueError, match="batch"):
+        m.batched_forward(jnp.stack([cloud, cloud, cloud]))
+    with pytest.raises(ValueError, match="batched"):
+        m.forward(cloud)
+
+
+def test_device_plan_layer_sizes_validated_against_config(setup):
+    from repro.core import DevicePlan
+    cfg, params, cloud = setup
+    wl = PointNetWorkload.build(np.asarray(cloud, np.float64), cfg)
+    plan = build_plan(wl, intra="index", coordinated=False)
+    dp = DevicePlan.lower(plan, [s.n_centers for s in cfg.layers])
+    bad_cfg = tiny_config(n=64, c1=16, c2=8)      # different layer-1 size
+    with pytest.raises(ValueError, match="layer sizes"):
+        compile_model(params, bad_cfg, schedule=dp)
+
+
+def test_available_backends_sorted_deterministically(setup):
+    """The registry listing is lexicographically sorted, independent of
+    registration order (latest-wins shadowing replaces entries in place,
+    it does not reorder the listing)."""
+    cfg, params, _ = setup
+    names = available_backends()
+    assert names == sorted(names)
+
+    @register_backend("aaa-first")
+    class _First(backend_mod.FloatBackend):
+        pass
+
+    try:
+        names = available_backends()
+        assert names == sorted(names) and names[0] == "aaa-first"
+    finally:
+        backend_mod._REGISTRY.pop("aaa-first")

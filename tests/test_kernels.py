@@ -10,7 +10,8 @@ try:
 except ImportError:      # deterministic sweep, see _hypothesis_fallback.py
     from _hypothesis_fallback import given, settings, st
 
-from repro.kernels import (aggregate_diff, count_dma_elisions, encode_planes,
+from repro.kernels import (aggregate_diff, aggregate_diff_batched,
+                           count_dma_elisions, encode_planes,
                            fps, fps_update, quantize_tensor, reram_linear,
                            reram_matmul_int)
 from repro.kernels.ref import (combine_planes, ref_aggregate_diff,
@@ -70,6 +71,29 @@ def test_aggregate_diff_matches_ref(dtype, m, k, c):
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref_aggregate_diff(f, nbr, ctr),
                                           np.float32), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,m,k,c", [(1, 6, 3, 128), (3, 17, 5, 256),
+                                       (4, 1, 1, 128)])
+def test_aggregate_diff_batched_matches_per_cloud(b, m, k, c):
+    """The batch-gridded gather is bitwise the stack of per-cloud gathers:
+    the batch axis is outermost in the grid and never interleaves two
+    clouds' index streams."""
+    f = jnp.asarray(RNG.normal(size=(b, 40, c)), jnp.float32)
+    nbr = jnp.asarray(RNG.integers(0, 40, (b, m, k)), jnp.int32)
+    ctr = jnp.asarray(RNG.integers(0, 40, (b, m)), jnp.int32)
+    out = aggregate_diff_batched(f, nbr, ctr)
+    assert out.shape == (b, m, k, c)
+    per = jnp.stack([aggregate_diff(f[i], nbr[i], ctr[i]) for i in range(b)])
+    assert bool(jnp.all(out == per))
+
+
+def test_aggregate_diff_batched_rejects_batch_mismatch():
+    f = jnp.zeros((2, 8, 128), jnp.float32)
+    nbr = jnp.zeros((3, 4, 2), jnp.int32)
+    ctr = jnp.zeros((3, 4), jnp.int32)
+    with pytest.raises(ValueError, match="batch"):
+        aggregate_diff_batched(f, nbr, ctr)
 
 
 @pytest.mark.parametrize("n,block", [(512, 512), (1024, 256), (128, 128)])

@@ -146,3 +146,134 @@ def test_paper_models_have_expected_structure():
         assert all(l.n_neighbors == 16 for l in cfg.layers)
     assert PAPER_MODELS["model0"].layers[0].mlp == (4, 64, 64, 128)
     assert PAPER_MODELS["model2"].layers[1].mlp == (512, 512, 512, 1024)
+
+
+# ---------------------------------------------------------------------------
+# hardened order plumbing: order_of / complete_order / inverse_permutation
+# ---------------------------------------------------------------------------
+
+def test_order_of_rejects_out_of_range_layer(workload):
+    """``order_of(0)`` used to wrap to the LAST layer via Python negative
+    indexing and silently feed a wrong gather order downstream."""
+    plan = build_plan(workload, intra="index", coordinated=False)
+    for layer in (0, -1, plan.n_layers + 1):
+        with pytest.raises(ValueError, match="1-based"):
+            plan.order_of(layer)
+    from repro.core import DevicePlan
+    dp = DevicePlan.lower(plan, [workload.points[k].shape[0]
+                                 for k in (1, 2)])
+    for layer in (0, -1, dp.n_layers + 1):
+        with pytest.raises(ValueError, match="1-based"):
+            dp.order_of(layer)
+        with pytest.raises(ValueError, match="1-based"):
+            dp.inverse_of(layer)
+
+
+def test_complete_order_rejects_duplicates_and_out_of_range():
+    from repro.core import complete_order
+    # duplicate in a PARTIAL order
+    with pytest.raises(ValueError, match="duplicate"):
+        complete_order(np.array([0, 1, 1]), 8, 1)
+    # duplicate in a FULL-LENGTH order (the old fast path returned it
+    # unvalidated: one row silently dropped, another gathered twice)
+    with pytest.raises(ValueError, match="duplicate"):
+        complete_order(np.array([0, 1, 1, 3]), 4, 1)
+    with pytest.raises(ValueError, match=r"\[0, 4\)"):
+        complete_order(np.array([0, 4]), 4, 1)
+    with pytest.raises(ValueError, match=r"\[0, 4\)"):
+        complete_order(np.array([-1, 0]), 4, 1)
+    with pytest.raises(ValueError, match="at most 4"):
+        complete_order(np.arange(5), 4, 1)
+    with pytest.raises(ValueError, match="1-D"):
+        complete_order(np.zeros((2, 2), dtype=np.int64), 4, 1)
+
+
+def test_complete_order_appends_orphans_at_tail():
+    from repro.core import complete_order
+    out = complete_order(np.array([5, 2, 7]), 8, 1)
+    assert out[:3].tolist() == [5, 2, 7]           # scheduled prefix intact
+    assert sorted(out.tolist()) == list(range(8))  # completed permutation
+    assert np.array_equal(complete_order(out, 8, 1), out)  # idempotent
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 200))
+@settings(max_examples=25, deadline=None)
+def test_order_inverse_round_trip_across_ragged_sizes(seed, n):
+    """Property: for any partial order over any ragged layer size,
+    complete -> invert -> compose is the identity both ways (the scatter
+    that makes planned logits order-invariant)."""
+    from repro.core import complete_order, inverse_permutation
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(0, n + 1))                # ragged partial length
+    partial = rng.permutation(n)[:m]
+    order = complete_order(partial, n, 1)
+    inv = inverse_permutation(order)
+    assert np.array_equal(order[inv], np.arange(n))
+    assert np.array_equal(inv[order], np.arange(n))
+    # scatter-back property: permuting values by order then gathering by
+    # inv restores index order
+    vals = rng.normal(size=n)
+    assert np.array_equal(vals[order][inv], vals)
+
+
+# ---------------------------------------------------------------------------
+# DevicePlan lowering
+# ---------------------------------------------------------------------------
+
+def test_device_plan_lowers_single_plan(workload):
+    import jax.numpy as jnp
+    from repro.core import DevicePlan, complete_order
+    plan = build_plan(workload, intra="greedy", coordinated=True)
+    sizes = [workload.points[k].shape[0] for k in (1, 2)]
+    dp = DevicePlan.lower(plan, sizes)
+    assert not dp.batched and dp.batch_size is None
+    assert dp.n_layers == 2
+    assert (dp.intra, dp.coordinated) == ("greedy", True)
+    for k, n in zip((1, 2), sizes):
+        o = np.asarray(dp.order_of(k))
+        assert o.dtype == np.int32 and o.shape == (n,)
+        assert np.array_equal(
+            o, complete_order(np.asarray(plan.order_of(k)), n, k))
+        assert np.array_equal(np.asarray(dp.inverse_of(k))[o], np.arange(n))
+        assert isinstance(dp.order_of(k), jnp.ndarray)
+
+
+def test_device_plan_stacks_batched_plans(workload):
+    from repro.core import DevicePlan, PointNetWorkload
+    sizes = [workload.points[k].shape[0] for k in (1, 2)]
+    wl2 = PointNetWorkload.random(tiny_config(), seed=7)
+    plans = [build_plan(workload, intra="morton", coordinated=True),
+             build_plan(wl2, intra="morton", coordinated=True)]
+    dp = DevicePlan.lower(plans, sizes)
+    assert dp.batched and dp.batch_size == 2
+    for k, n in zip((1, 2), sizes):
+        assert dp.order_of(k).shape == (2, n)
+        singles = [DevicePlan.lower(p, sizes) for p in plans]
+        for b, s in enumerate(singles):
+            assert np.array_equal(np.asarray(dp.order_of(k))[b],
+                                  np.asarray(s.order_of(k)))
+
+
+def test_device_plan_validates_inputs(workload):
+    from repro.core import DevicePlan
+    plan = build_plan(workload, intra="index", coordinated=False)
+    with pytest.raises(ValueError, match="at least one"):
+        DevicePlan.lower([], [24, 8])
+    with pytest.raises(ValueError, match="layer count"):
+        DevicePlan.lower(plan, [24, 8, 4])
+
+
+def test_device_plan_is_a_pytree(workload):
+    import jax
+    from repro.core import DevicePlan
+    plan = build_plan(workload, intra="greedy", coordinated=True)
+    dp = DevicePlan.lower(plan, [workload.points[k].shape[0]
+                                 for k in (1, 2)])
+    leaves, treedef = jax.tree_util.tree_flatten(dp)
+    assert len(leaves) == 4                       # 2 layers x (order, inv)
+    dp2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert (dp2.layer_sizes, dp2.intra, dp2.coordinated) == \
+        (dp.layer_sizes, dp.intra, dp.coordinated)
+    for k in (1, 2):
+        assert np.array_equal(np.asarray(dp2.order_of(k)),
+                              np.asarray(dp.order_of(k)))
