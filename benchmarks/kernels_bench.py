@@ -184,7 +184,10 @@ def kernels(iters=3):
     # host_ratio is interpret-mode wall time (noisy, characterizes the
     # host Python loop, not a TPU).
     model_p = compile_model(params, cfg_t, backend="reram-fused",
-                            program=prog, schedule="pointer")
+                            program=prog, schedule="pointer",
+                            device_planning=False)   # host path: keeps the
+    # measured-stream telemetry this row reports (the device-planned twin
+    # is the plan/device_build row below)
     def batched_plan(c):
         return model_p.batched_forward(c)
     def per_cloud_loop(c):
@@ -200,4 +203,50 @@ def kernels(iters=3):
         f"host_ratio={us_l / max(us_b, 1e-9):.2f}x;"
         f"gather_launches={L}_vs_{B * L};elided={st['elided']};"
         f"elision_rate={st['elision_rate']:.3f}"))
+    # on-device plan construction (PR 6): Algorithm 1 lowered to jnp/lax —
+    # jitted device_build_plan vs the NumPy build_plan on the same geometry
+    # (bit-identical orders, property-tested), plus the end-to-end
+    # device-planned batched_forward: ONE jitted clouds→logits function,
+    # plan construction inside the trace, zero np.asarray host pulls on
+    # geometry (the host-planned path pulls B clouds' geometry per batch)
+    from repro.core import DevicePlan
+    from repro.core.schedule import device_build_plan
+    wl_t = PointNetWorkload.random(cfg_t, seed=0)
+    sizes = tuple(s.n_centers for s in cfg_t.layers)
+    nbrs = [jnp.asarray(wl_t.neighbors[k], jnp.int32)
+            for k in range(1, cfg_t.n_layers + 1)]
+    last_pts = jnp.asarray(wl_t.points[-1], jnp.float32)
+
+    def host_build():
+        return DevicePlan.lower(
+            build_plan(wl_t, intra="greedy", coordinated=True), sizes)
+
+    dev_build = jax.jit(
+        lambda lp, nbs: device_build_plan(nbs, lp, intra="greedy",
+                                          coordinated=True))
+    us_dev = _time(lambda lp, nbs: dev_build(lp, nbs), last_pts, nbrs,
+                   iters=iters)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        host_build()
+    us_host = (time.perf_counter() - t0) / iters * 1e6
+    model_d = compile_model(params, cfg_t, backend="reram-fused",
+                            program=prog, schedule="pointer")
+    assert model_d.device_planning
+    pulls = []
+    real_asarray = np.asarray
+    np.asarray = lambda x, *a, **k: (
+        pulls.append(1) if isinstance(x, jax.Array) else None,
+        real_asarray(x, *a, **k))[1]
+    try:
+        us_e2e = _time(model_d.jit_batched_forward, clouds, iters=iters)
+    finally:
+        np.asarray = real_asarray
+    rows.append(row(
+        f"plan/device_build/{cfg_t.n_points}x{'x'.join(map(str, sizes))}",
+        us_dev,
+        f"host_build_us={us_host:.0f};"
+        f"host_ratio={us_host / max(us_dev, 1e-9):.2f}x;"
+        f"e2e_device_planned_us={us_e2e:.0f};gather_launches={L};"
+        f"host_geometry_pulls=0_vs_{B};asarray_device_pulls={len(pulls)}"))
     return rows

@@ -1,13 +1,49 @@
 """Benchmark harness: one function per paper table/figure + kernel micro +
-beyond-paper scheduling. Prints ``name,us_per_call,derived`` CSV.
+beyond-paper scheduling. Prints ``name,us_per_call,derived`` CSV and writes
+the same rows machine-readably to a ``BENCH_*.json`` trajectory file
+(rows + run metadata: git sha, jax version, interpret mode) so runs can be
+diffed across commits.
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only PREFIX]
+                                                [--json-out PATH]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import subprocess
 import sys
 import time
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, check=True).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def _parse_row(line: str) -> dict:
+    """'name,us,derived' (derived may itself contain ';'-joined pairs)."""
+    name, us, derived = line.split(",", 2)
+    return {"name": name, "us_per_call": float(us), "derived": derived}
+
+
+def _metadata(args) -> dict:
+    import jax
+    return {
+        "git_sha": _git_sha(),
+        "jax_version": jax.__version__,
+        "backend_platform": jax.default_backend(),
+        # the Pallas kernels run with interpret=True everywhere off-TPU
+        # (see repro.kernels): absolute µs characterize the host
+        "pallas_interpret_mode": jax.default_backend() != "tpu",
+        "timestamp_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "quick": bool(args.quick),
+        "only": args.only,
+    }
 
 
 def main(argv=None) -> None:
@@ -16,6 +52,9 @@ def main(argv=None) -> None:
                     help="single workload seed (faster)")
     ap.add_argument("--only", default=None,
                     help="run only benches whose name starts with this")
+    ap.add_argument("--json-out", default=None,
+                    help="trajectory file path (default: "
+                         "BENCH_<utc-timestamp>.json in the cwd)")
     args = ap.parse_args(argv)
 
     from .common import workloads
@@ -34,6 +73,8 @@ def main(argv=None) -> None:
         ("kernel", kernels),
         ("beyond", lambda: beyond(wls)),
     ]
+    meta = _metadata(args)
+    records = []
     print("name,us_per_call,derived")
     for name, fn in benches:
         if args.only and not name.startswith(args.only):
@@ -41,8 +82,15 @@ def main(argv=None) -> None:
         t0 = time.monotonic()
         for line in fn():
             print(line)
+            records.append({"bench": name, **_parse_row(line)})
         print(f"# {name} done in {time.monotonic() - t0:.1f}s",
               file=sys.stderr)
+    out = args.json_out or time.strftime("BENCH_%Y%m%dT%H%M%SZ.json",
+                                         time.gmtime())
+    with open(out, "w") as f:
+        json.dump({"metadata": meta, "rows": records}, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {len(records)} rows to {out}", file=sys.stderr)
 
 
 if __name__ == "__main__":

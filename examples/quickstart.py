@@ -57,7 +57,7 @@ def main():
                             schedule="pointer")               # the paper
     logits_f = model_f.forward(cloud)
     logits_q = model_q.forward(cloud)
-    st = model_q.stats()
+    st = model_q.stats(wl.points[0])
     launches = sum(len(p) for p in params["sa"]) + len(params["head"])
     n_mlps = cfg.n_layers + 1
     modes = {k: v["mode"] for k, v in st["fused_plan"].items()}
@@ -85,6 +85,17 @@ def main():
           f"batched plan-driven forward = {cfg.n_layers} gather launches "
           f"for {clouds.shape[0]} clouds (one per SA layer), logits "
           f"bitwise-equal to the per-cloud loop")
+
+    # on-device planning (DESIGN.md §11): for spec-driven schedules the
+    # plan is CONSTRUCTED inside the trace too — Algorithm 1 as jnp/lax
+    # ops, bit-identical orders to the NumPy oracles — so the whole
+    # cloud→logits pipeline is one jitted function with zero host sync
+    assert model_q.device_planning
+    jit_logits = model_q.jit_batched_forward(clouds)
+    assert bool(jnp.all(jit_logits == model_p.batched_forward(clouds)))
+    print(f"on-device planning: schedule='pointer' builds its DevicePlan "
+          f"inside the jit trace — jit_batched_forward({clouds.shape[0]} "
+          f"clouds) matches the host-planned logits bitwise")
 
 
 if __name__ == "__main__":

@@ -91,6 +91,26 @@ True
 (8,)
 >>> logits = jax.jit(dm.forward)(cloud)   # device plans trace under jit
 
+**On-device planning** — plan *construction* in the trace (DESIGN.md
+§11). For spec-driven planned schedules, Algorithm 1 itself runs as
+jnp/lax ops (``repro.core.schedule.device_build_plan``), bit-identical
+to the NumPy oracles, so ``compile_model`` yields ONE end-to-end
+jittable cloud→logits function — ``jit_forward`` /
+``jit_batched_forward`` are the cached jits, and ``batched_forward``
+builds a batched ``DevicePlan`` inside the trace (vmap over clouds,
+zero host sync). Auto-on whenever the schedule allows; the host
+fallback stays one ``device_planning=False`` away:
+
+>>> dp = repro.compile_model(params, cfg, schedule="pointer")
+>>> dp.device_planning                    # on by default for presets
+True
+>>> host = repro.compile_model(params, cfg, schedule="pointer",
+...                            device_planning=False)
+>>> clouds = jnp.stack([cloud, cloud * 0.5])
+>>> bool(jnp.all(dp.jit_batched_forward(clouds)   # plan built in-trace
+...              == host.batched_forward(clouds)))
+True
+
 **CrossbarProgram** — the weight-stationary lifecycle
 (``repro.kernels.program``): every MLP quantized + 2-bit-plane-encoded
 exactly once at "program time", VMEM-ready and resident thereafter; the
@@ -117,7 +137,7 @@ from repro.kernels import CrossbarProgram
 from repro.models.backend import (Backend, CompiledModel, available_backends,
                                   compile_model, register_backend)
 
-__version__ = "0.5.0"
+__version__ = "0.6.0"
 
 __all__ = [
     "Backend",

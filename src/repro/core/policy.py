@@ -38,6 +38,13 @@ from .workload import PointNetWorkload
 __all__ = ["PlanPolicy", "DEFAULT_POLICY"]
 
 
+def _is_traced(x) -> bool:
+    """True when ``x`` is a JAX tracer (abstract value inside jit/vmap).
+    Lazy import keeps this module importable without touching jax."""
+    import jax
+    return isinstance(x, jax.core.Tracer)
+
+
 @dataclass(frozen=True)
 class PlanPolicy:
     """Roofline cost models + the two scheduling decisions they drive.
@@ -146,8 +153,36 @@ class PlanPolicy:
 
     def select_intra(self, workload: PointNetWorkload) -> str:
         """The intra mode among ``intra_candidates`` with the most
-        predicted DMA elisions on ``workload``."""
+        predicted DMA elisions on ``workload``.
+
+        Safe to call from traced values: a single-candidate policy (the
+        result of :meth:`precommit`) answers without touching the
+        geometry at all, so it composes with on-device planning inside a
+        ``jax.jit`` trace; a multi-candidate policy needs concrete
+        coordinates to score and raises ``TypeError`` on tracers instead
+        of silently forcing a host sync."""
+        if len(self.intra_candidates) == 1:
+            return self.intra_candidates[0]
+        if any(_is_traced(p) for p in workload.points):
+            raise TypeError(
+                "PlanPolicy.select_intra scores candidate orders on "
+                "concrete geometry and cannot run on traced values; "
+                "precommit the decision first "
+                "(policy.precommit(representative_workload)) or pass a "
+                "single-candidate policy")
         return self._select_plan(workload).intra
+
+    def precommit(self, workload: PointNetWorkload) -> "PlanPolicy":
+        """Pin the intra decision at compile time: score the candidates
+        on a representative ``workload`` once, on host, and return a copy
+        whose ``intra_candidates`` holds only the winner. The precommitted
+        policy makes its ordering decision without per-cloud host work, so
+        ``compile_model(policy=...)`` can lower plan construction into the
+        trace (on-device planning) — the cost model runs at compile time,
+        the schedule it chose runs on device."""
+        import dataclasses
+        return dataclasses.replace(
+            self, intra_candidates=(self._select_plan(workload).intra,))
 
     def build_plan(self, workload: PointNetWorkload) -> ExecutionPlan:
         """The ordering decision end to end: pick the intra mode by

@@ -40,6 +40,10 @@ __all__ = [
     "build_plan",
     "complete_order",
     "inverse_permutation",
+    "device_order_greedy",
+    "device_order_morton",
+    "device_coordinate",
+    "device_build_plan",
     "MODE_PRESETS",
 ]
 
@@ -275,11 +279,21 @@ def _interleave_bits(v: np.ndarray, nbits: int) -> np.ndarray:
 def morton_order(points: np.ndarray, nbits: int = 10) -> np.ndarray:
     """Beyond-paper: order points along a Morton (Z-order) space-filling
     curve. Unlike the greedy chain it cannot "strand" far-away points for
-    the end of the order, and it needs no O(n^2) search."""
+    the end of the order, and it needs no O(n^2) search.
+
+    Degenerate axes (``hi == lo``: planar or collinear clouds) are clamped
+    to bucket 0 by treating their extent as 1, instead of dividing by the
+    old fixed ``1e-12`` epsilon — which left bucket 0 only by the accident
+    of exact ``points - lo`` cancellation and quantized any sub-epsilon
+    spread relative to the epsilon rather than the true extent, collapsing
+    distinct coordinates into one bucket. Quantization happens in the
+    input dtype, so :func:`device_order_morton` on the same coordinates
+    produces the bit-identical permutation (regression-tested)."""
     lo = points.min(axis=0, keepdims=True)
     hi = points.max(axis=0, keepdims=True)
-    q = ((points - lo) / np.maximum(hi - lo, 1e-12) * (2**nbits - 1)).astype(
-        np.uint64)
+    extent = hi - lo
+    safe = np.where(extent > 0, extent, np.ones_like(extent))
+    q = ((points - lo) / safe * (2**nbits - 1)).astype(np.uint64)
     return np.argsort(_interleave_bits(q, nbits), kind="stable")
 
 
@@ -310,6 +324,187 @@ def coordinate_layers(workload: PointNetWorkload, last_order: np.ndarray,
     return ExecutionPlan(
         orders=[np.asarray(orders[k], dtype=np.int64) for k in range(1, L + 1)],
         trace=trace, intra=intra, coordinated=True)
+
+
+# ---------------------------------------------------------------------------
+# on-device planning: the same three passes as JAX computations
+# ---------------------------------------------------------------------------
+#
+# The NumPy functions above are the host oracles; the ``device_*`` twins
+# below re-express them in jnp/lax so plan CONSTRUCTION — not just plan
+# execution (PR 5) — happens inside a jit trace. This is the paper's
+# Algorithm 1 running where the hardware runs it: Pointer's order generator
+# sits in the accelerator front-end, and PointAcc makes the same argument
+# with a dedicated mapping unit. Contract: on the same coordinates (same
+# dtype), each device function returns the bit-identical permutation to its
+# host oracle (tie-breaks included: ``argmin``/``argsort`` pick the first
+# minimum on both sides, stable sorts preserve index order on equal keys).
+# The device greedy sweep materializes the O(n^2) pairwise matrix, so it is
+# limited to n <= GREEDY_DENSE_LIMIT — exactly the regime where the host
+# dense path (whose rounding it mirrors) runs.
+
+
+def device_order_greedy(points, start: int = 0):
+    """Device twin of :func:`greedy_nn_order` (paper Algorithm 1 lines
+    1-8): a masked-argmin ``lax.fori_loop`` sweep over the precomputed
+    pairwise distance matrix. ``points`` is a traced/device ``(n, d)``
+    array with n <= ``GREEDY_DENSE_LIMIT`` (static); returns ``(n,)``
+    int32. The distance matrix accumulates coordinate-wise in the same
+    order as the host dense path, so orders are bit-identical for equal
+    input dtype."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    points = jnp.asarray(points)
+    n = points.shape[0]
+    if n > GREEDY_DENSE_LIMIT:
+        raise ValueError(
+            f"device_order_greedy materializes an O(n^2) distance matrix "
+            f"and is limited to n <= {GREEDY_DENSE_LIMIT}; got n={n} "
+            f"(use the host greedy_nn_order fallback)")
+    if n == 0:
+        return jnp.empty(0, dtype=jnp.int32)
+    d2 = (points[:, 0, None] - points[None, :, 0]) ** 2
+    for c in range(1, points.shape[1]):
+        d2 = d2 + (points[:, c, None] - points[None, :, c]) ** 2
+
+    def body(i, state):
+        order, remaining, cur = state
+        order = order.at[i].set(cur)
+        remaining = remaining.at[cur].set(False)
+        d = jnp.where(remaining, d2[cur], jnp.inf)
+        return order, remaining, jnp.argmin(d).astype(jnp.int32)
+
+    order, _, _ = lax.fori_loop(
+        0, n, body,
+        (jnp.zeros(n, jnp.int32), jnp.ones(n, jnp.bool_),
+         jnp.asarray(start, jnp.int32)))
+    return order
+
+
+def device_order_morton(points, nbits: int = 10):
+    """Device twin of :func:`morton_order`: quantize each axis to
+    ``nbits`` buckets (degenerate axes pinned to bucket 0, same clamp as
+    the host), interleave bits into a uint32 Z-order key, stable-argsort.
+    Trivially vectorizable — no loops over points at all."""
+    import jax.numpy as jnp
+
+    if 3 * nbits > 32:
+        raise ValueError(f"3*nbits must fit a uint32 key; got nbits={nbits}")
+    points = jnp.asarray(points)
+    lo = points.min(axis=0, keepdims=True)
+    hi = points.max(axis=0, keepdims=True)
+    extent = hi - lo
+    safe = jnp.where(extent > 0, extent, jnp.ones_like(extent))
+    q = ((points - lo) / safe * (2**nbits - 1)).astype(jnp.uint32)
+    key = jnp.zeros(points.shape[0], jnp.uint32)
+    for b in range(nbits):
+        key = key | (((q[:, 0] >> b) & 1) << (3 * b + 2))
+        key = key | (((q[:, 1] >> b) & 1) << (3 * b + 1))
+        key = key | (((q[:, 2] >> b) & 1) << (3 * b))
+    return jnp.argsort(key, stable=True).astype(jnp.int32)
+
+
+def device_coordinate(neighbors, last_order):
+    """Device twin of :func:`coordinate_layers` (paper Algorithm 1 lines
+    9-13): the recursive receptive-field walk re-expressed as an iterative
+    ``lax.scan`` over the last-layer order with per-layer visited masks.
+
+    neighbors[k-1] : (n_k, K_k) device int array — layer k's receptive
+                     fields, indices into layer k-1 (k = 1..L; the layer-1
+                     entry is carried for shape/size only, its contents
+                     never gate scheduling below layer 1).
+    last_order     : (n_L,) device int array, the layer-L execution order.
+
+    Returns one int32 **full permutation per layer** (1..L) in
+    :class:`DevicePlan` layout: the walk's partial order with the orphan
+    points (outside every last-layer receptive field) appended at the tail
+    in ascending index order — exactly ``complete_order`` of the host
+    walk's output, bit-identical (tested). Each scan step schedules one
+    last-layer point: its not-yet-visited pyramid members depth-first in
+    row order (the host recursion's visit order), then the point itself;
+    visited masks implement the "calculated once" dedup."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    nbrs = [jnp.asarray(nb, jnp.int32) for nb in neighbors]
+    L = len(nbrs)
+    sizes = [int(nb.shape[0]) for nb in nbrs]
+
+    def exec_point(k, i, st):
+        """execute(k, i) of the host recursion: skip if visited, else
+        visit members (k > 1) then append i to layer k's order."""
+        def visit(st):
+            if k > 1:
+                st, _ = lax.scan(
+                    lambda c, m: (exec_point(k - 1, m, c), None),
+                    st, nbrs[k - 1][i])
+            orders, ptrs, dones = (list(st[0]), list(st[1]), list(st[2]))
+            orders[k - 1] = orders[k - 1].at[ptrs[k - 1]].set(i)
+            dones[k - 1] = dones[k - 1].at[i].set(True)
+            ptrs[k - 1] = ptrs[k - 1] + 1
+            return tuple(orders), tuple(ptrs), tuple(dones)
+
+        return lax.cond(st[2][k - 1][i], lambda s: s, visit, st)
+
+    st0 = (tuple(jnp.zeros(n, jnp.int32) for n in sizes),
+           tuple(jnp.zeros((), jnp.int32) for _ in sizes),
+           tuple(jnp.zeros(n, jnp.bool_) for n in sizes))
+    st, _ = lax.scan(lambda c, j: (exec_point(L, j, c), None),
+                     st0, jnp.asarray(last_order, jnp.int32))
+    orders, ptrs, dones = st
+    return [_device_complete(o, p, d)
+            for o, p, d in zip(orders, ptrs, dones)]
+
+
+def _device_complete(order, ptr, done):
+    """Orphan-complete a partial device order in place: scatter the
+    unvisited indices (ascending — matching ``complete_order``'s sorted
+    ``setdiff1d`` tail) into the slots after ``ptr``."""
+    import jax.numpy as jnp
+
+    n = order.shape[0]
+    orphan = ~done
+    offs = jnp.cumsum(orphan.astype(jnp.int32)) - orphan.astype(jnp.int32)
+    pos = jnp.where(orphan, ptr + offs, n)        # n = out-of-bounds drop
+    return order.at[pos].set(jnp.arange(n, dtype=jnp.int32), mode="drop")
+
+
+def _device_inverse(order):
+    """Device :func:`inverse_permutation`: ``inv[order] = arange(n)``."""
+    import jax.numpy as jnp
+
+    return (jnp.zeros_like(order)
+            .at[order].set(jnp.arange(order.shape[0], dtype=order.dtype)))
+
+
+def device_build_plan(neighbors, last_points, *, intra: IntraMode = "index",
+                      coordinated: bool = False, start: int = 0,
+                      nbits: int = 10) -> DevicePlan:
+    """Build a single-cloud :class:`DevicePlan` entirely from device
+    arrays — the whole of :func:`build_plan` + ``DevicePlan.lower`` as one
+    traceable computation (vmap it over stacked per-cloud geometry for a
+    batched plan). ``neighbors``/``last_points`` are the traced geometry
+    outputs of the forward pass itself: neighbors[k-1] is layer k's
+    (n_k, K) receptive fields, last_points the layer-L coordinates that
+    the intra order sorts."""
+    import jax.numpy as jnp
+
+    sizes = tuple(int(nb.shape[0]) for nb in neighbors)
+    if intra == "index":
+        last = jnp.arange(sizes[-1], dtype=jnp.int32)
+    elif intra == "greedy":
+        last = device_order_greedy(last_points, start=start)
+    elif intra == "morton":
+        last = device_order_morton(last_points, nbits=nbits)
+    else:
+        raise ValueError(f"unknown intra mode {intra!r}")
+    if coordinated:
+        orders = device_coordinate(neighbors, last)
+    else:
+        orders = [jnp.arange(n, dtype=jnp.int32) for n in sizes[:-1]] + [last]
+    return DevicePlan(orders, [_device_inverse(o) for o in orders], sizes,
+                      intra=intra, coordinated=coordinated)
 
 
 def _layer_by_layer(workload: PointNetWorkload, last_order: np.ndarray,

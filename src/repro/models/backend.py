@@ -68,9 +68,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.policy import PlanPolicy
-from repro.core.schedule import (DevicePlan, ExecutionPlan, MODE_PRESETS,
+from repro.core.schedule import (DevicePlan, ExecutionPlan,
+                                 GREEDY_DENSE_LIMIT, MODE_PRESETS,
                                  build_plan, complete_order,
-                                 inverse_permutation)
+                                 device_build_plan, inverse_permutation)
 from repro.core.workload import PointNetConfig, PointNetWorkload
 from repro.kernels import (aggregate_diff, aggregate_diff_batched,
                            count_dma_elisions, plan_fused_mlp, reram_linear,
@@ -350,6 +351,31 @@ def _canonical_schedule(schedule, config: PointNetConfig):
                     f"{type(schedule).__name__}")
 
 
+def _device_planning_blocker(spec: dict, config: PointNetConfig,
+                             policy: PlanPolicy | None) -> str | None:
+    """Why plan construction can NOT be lowered into the trace for this
+    (spec, config, policy) — or None when on-device planning is available.
+    The two host-only cases: a policy whose intra choice is still
+    per-workload (score-on-concrete-geometry; ``precommit`` it first), and
+    a greedy order whose last layer exceeds the dense-sweep limit (the
+    device sweep materializes the O(n^2) pairwise matrix)."""
+    intra = spec["intra"]
+    if intra == "auto":
+        if policy is None or len(policy.intra_candidates) != 1:
+            return ("the policy's intra choice is per-workload (scored on "
+                    "concrete geometry); precommit it to one candidate "
+                    "first — policy.precommit(representative_workload)")
+        intra = policy.intra_candidates[0]
+    if intra == "greedy" and config.layers[-1].n_centers > GREEDY_DENSE_LIMIT:
+        return (f"device greedy ordering materializes an O(n^2) distance "
+                f"matrix and is limited to last-layer sizes <= "
+                f"GREEDY_DENSE_LIMIT={GREEDY_DENSE_LIMIT}; this config's "
+                f"last layer has {config.layers[-1].n_centers} centers")
+    if intra not in ("index", "greedy", "morton"):
+        return f"unknown intra mode {intra!r}"
+    return None
+
+
 # ---------------------------------------------------------------------------
 # the compiled model
 # ---------------------------------------------------------------------------
@@ -363,7 +389,8 @@ class CompiledModel:
     def __init__(self, backend: Backend, config: PointNetConfig,
                  schedule_spec: dict, plan: ExecutionPlan | None,
                  planned: bool, device_plan: DevicePlan | None = None,
-                 policy: PlanPolicy | None = None):
+                 policy: PlanPolicy | None = None,
+                 device_planning: bool = False):
         self.backend = backend
         self.config = config
         self._spec = schedule_spec
@@ -371,7 +398,10 @@ class CompiledModel:
         self._dplan = device_plan  # compile-time lowered plan, if any
         self._policy = policy
         self._planned = planned
+        self._device_planning = device_planning
         self._jit_eval = None
+        self._jit_fwd = None
+        self._jit_bfwd = None
         self._last_dma: dict | None = None
 
     # -- public metadata ----------------------------------------------------
@@ -398,6 +428,16 @@ class CompiledModel:
         schedule is per-cloud: spec/policy-driven plans are built from
         each cloud's own geometry at call time)."""
         return self._dplan
+
+    @property
+    def device_planning(self) -> bool:
+        """True when per-cloud plan construction is lowered into the trace
+        (``device_build_plan`` on the forward's own geometry tensors —
+        zero host sync, jits end to end). False for the host fallbacks
+        (``device_planning=False``, a non-precommitted policy, greedy past
+        ``GREEDY_DENSE_LIMIT``) and for schedules that need no per-cloud
+        construction at all (baseline, prebuilt plans)."""
+        return self._device_planning
 
     # -- execution ----------------------------------------------------------
 
@@ -430,15 +470,46 @@ class CompiledModel:
         return nll, acc
 
     def eval_step(self, clouds, labels):
-        """Jit-compiled ``loss_fn`` (cached per compiled model). Schedules
-        that build their plan on host per cloud (preset/spec/policy) run
-        eagerly — only the kernels underneath are jitted; a compile-time
-        :class:`DevicePlan` is device-resident and jits like baseline."""
-        if self._planned and self._dplan is None:
+        """Jit-compiled ``loss_fn`` (cached per compiled model). Only
+        schedules that still build their plan on host per cloud (host
+        fallback: ``device_planning=False`` / non-precommitted policy /
+        greedy past the dense limit) run eagerly — with a compile-time
+        :class:`DevicePlan` or on-device planning the whole pipeline jits
+        like baseline."""
+        if self._planned and self._dplan is None and not self._device_planning:
             return self.loss_fn(clouds, labels)
         if self._jit_eval is None:
             self._jit_eval = jax.jit(self.loss_fn)
         return self._jit_eval(clouds, labels)
+
+    def _require_traceable(self, what: str) -> None:
+        if self._planned and self._dplan is None and not self._device_planning:
+            raise TypeError(
+                f"{what} needs the whole pipeline to trace under jax.jit, "
+                f"but this model plans on host per cloud (device_planning "
+                f"is off); compile with device_planning=True, precommit "
+                f"the policy, or pass a prebuilt ExecutionPlan/DevicePlan")
+
+    def jit_forward(self, cloud: jnp.ndarray) -> jnp.ndarray:
+        """:meth:`forward` as ONE end-to-end jitted function cloud→logits
+        (compiled on first call, cached). Under an on-device-planned
+        schedule the jitted computation contains geometry, Algorithm-1
+        plan construction, gathers, and MLPs — no host callback
+        anywhere."""
+        if self._jit_fwd is None:
+            self._require_traceable("jit_forward")
+            self._jit_fwd = jax.jit(self.forward)
+        return self._jit_fwd(cloud)
+
+    def jit_batched_forward(self, clouds: jnp.ndarray) -> jnp.ndarray:
+        """:meth:`batched_forward` as ONE end-to-end jitted function
+        clouds→logits (compiled per batch shape, cached): batched
+        geometry, a vmapped ``device_build_plan``, one batch-gridded
+        gather + one batched MLP apply per SA layer."""
+        if self._jit_bfwd is None:
+            self._require_traceable("jit_batched_forward")
+            self._jit_bfwd = jax.jit(self.batched_forward)
+        return self._jit_bfwd(clouds)
 
     # -- introspection ------------------------------------------------------
 
@@ -544,20 +615,30 @@ class CompiledModel:
 
     def _geometry_pass(self, cloud):
         """Pass 1 of planned execution: the same FPS/kNN geometry as the
-        base path, kept as explicit per-layer tensors so the plan (built
-        from exactly this geometry) permutes exactly the rows being
-        gathered."""
-        pts_list, ctr_list, nbr_list = [cloud], [None], [None]
-        pts = cloud
-        for spec in self.config.layers:
-            centers = _pn.farthest_point_sample(pts, spec.n_centers)
-            c_pts = pts[centers]
-            nbr = _pn.knn(c_pts, pts, spec.n_neighbors)
-            pts_list.append(c_pts)
-            ctr_list.append(centers)
-            nbr_list.append(nbr)
-            pts = c_pts
-        return pts_list, ctr_list, nbr_list
+        base path, kept as explicit per-layer device tensors so the plan
+        (built from exactly this geometry — on device or on host) permutes
+        exactly the rows being gathered."""
+        return _pn.geometry_pass(self.config, cloud)
+
+    def _resolved_intra(self) -> str:
+        """The concrete intra mode device planning lowers ('auto' resolves
+        to the precommitted policy's single candidate)."""
+        intra = self._spec["intra"]
+        if intra == "auto":
+            return self._policy.intra_candidates[0]
+        return intra
+
+    def _traced_plan(self, pts_list, nbr_list) -> DevicePlan:
+        """On-device plan construction for one cloud: Algorithm 1 on the
+        forward's own traced geometry via
+        :func:`~repro.core.schedule.device_build_plan` — no host sync, so
+        the caller can be (and under ``jit_forward`` is) a jit trace."""
+        cfg = self.config
+        nbrs = [nbr_list[k].astype(jnp.int32)
+                for k in range(1, cfg.n_layers + 1)]
+        return device_build_plan(nbrs, pts_list[-1],
+                                 intra=self._resolved_intra(),
+                                 coordinated=self._spec["coordinated"])
 
     def _forward_planned(self, cloud):
         """Plan-driven execution. Pass 2 runs each SA layer's centers in
@@ -566,52 +647,64 @@ class CompiledModel:
         stream is what elides DMAs — then scatters the per-center max back
         to index order, which makes the logits bitwise independent of the
         order. The schedule itself is a :class:`DevicePlan`: lowered once
-        at compile time when prebuilt (then this whole function jits), or
+        at compile time when prebuilt, built INSIDE the trace from this
+        cloud's own geometry under on-device planning (then the whole
+        function jits with zero host transfers), or — host fallback —
         lowered here from the host plan the spec/policy builds for this
         cloud's geometry."""
         cfg = self.config
         feats = _pn.lift_features(cloud, cfg.layers[0].in_features)
         pts_list, ctr_list, nbr_list = self._geometry_pass(cloud)
-        dplan = self._device_plan_for(pts_list, ctr_list, nbr_list)
+        if self._dplan is not None:
+            dplan = self._dplan
+        elif self._device_planning:
+            dplan = self._traced_plan(pts_list, nbr_list)
+        else:
+            dplan = self._device_plan_for(pts_list, ctr_list, nbr_list)
         if dplan.batched:
             raise ValueError("compile_model was given a batched DevicePlan; "
                              "use batched_forward for it")
-        tracing = isinstance(cloud, jax.core.Tracer)
+        # measured-stream telemetry is a host pull (np.asarray); device
+        # planning keeps the hot path free of host transfers by contract,
+        # so only the host-planned / prebuilt eager paths collect it
+        collect = (not self._device_planning
+                   and not isinstance(cloud, jax.core.Tracer))
         streams = []
         for k in range(1, cfg.n_layers + 1):
             order = dplan.order_of(k)
             inv = dplan.inverse_of(k)
             nbr_o = jnp.take(nbr_list[k].astype(jnp.int32), order, axis=0)
             ctr_o = jnp.take(ctr_list[k].astype(jnp.int32), order, axis=0)
-            if not tracing:
+            if collect:
                 streams.append([np.asarray(nbr_o)])
             diff = aggregate_diff(feats, nbr_o, ctr_o)   # plan-ordered gather
             h = self.backend.apply_mlp(("sa", k - 1), diff)
             out = jnp.max(h, axis=1)                     # reduction over K
             feats = jnp.take(out, inv, axis=0)           # back to index order
-        if not tracing:
+        if collect:
             self._last_dma = self._dma_report(None, None, 72, streams=streams)
         g = jnp.max(feats, axis=0)
         return self.backend.apply_mlp("head", g, final_relu=False)
 
     def _batched_forward_planned(self, clouds):
         """Batched plan-driven execution — the per-cloud Python loop folded
-        into single batch-gridded launches. Geometry still runs per cloud
-        (its concrete points are what the host plans are built from), but
-        the per-cloud plans are stacked into ONE batched
-        :class:`DevicePlan` and every SA layer then issues exactly one
+        into single batch-gridded launches. On-device planning (and any
+        prebuilt :class:`DevicePlan`) routes through the fully-traced
+        :meth:`_batched_forward_device` path — vmapped geometry, vmapped
+        plan construction, zero host sync. Only the host-planning fallback
+        still walks the batch in Python: its per-cloud ``np.asarray``
+        geometry pull is exactly what the host plans are built from.
+        Either way every SA layer issues exactly one
         ``aggregate_diff_batched`` gather and one batched MLP apply for
         the whole batch. Same arithmetic per row as the per-cloud path, so
         logits are bitwise equal to ``stack([forward(c) for c in clouds])``
         (tested per schedule)."""
+        if self._dplan is not None or self._device_planning:
+            return self._batched_forward_device(clouds)
         cfg = self.config
         batch = clouds.shape[0]
         geoms = [self._geometry_pass(clouds[b]) for b in range(batch)]
         dplan = self._device_plan_for(*geoms[0], batch_geoms=geoms)
-        if dplan.batched and dplan.batch_size != batch:
-            raise ValueError(
-                f"batched DevicePlan is for batch {dplan.batch_size}, "
-                f"got {batch} clouds")
         tracing = isinstance(clouds, jax.core.Tracer)
         feats = jnp.stack([_pn.lift_features(clouds[b],
                                              cfg.layers[0].in_features)
@@ -620,9 +713,6 @@ class CompiledModel:
         for k in range(1, cfg.n_layers + 1):
             order = dplan.order_of(k)
             inv = dplan.inverse_of(k)
-            if not dplan.batched:                 # one plan shared batch-wide
-                order = jnp.broadcast_to(order, (batch,) + order.shape)
-                inv = jnp.broadcast_to(inv, (batch,) + inv.shape)
             nbr_k = jnp.stack([g[2][k] for g in geoms]).astype(jnp.int32)
             ctr_k = jnp.stack([g[1][k] for g in geoms]).astype(jnp.int32)
             nbr_o = jnp.take_along_axis(nbr_k, order[:, :, None], axis=1)
@@ -630,16 +720,65 @@ class CompiledModel:
             if not tracing:
                 streams.append(list(np.asarray(nbr_o)))
             diff = aggregate_diff_batched(feats, nbr_o, ctr_o)  # ONE launch
-            if self.backend.batched_in_grid:
-                h = self.backend.apply_mlp_batched(("sa", k - 1), diff)
-            else:
-                h = jax.vmap(
-                    lambda d, key=("sa", k - 1):
-                    self.backend.apply_mlp(key, d))(diff)
+            h = self._apply_sa_mlp_batched(k, diff)
             out = jnp.max(h, axis=2)                     # reduction over K
             feats = jnp.take_along_axis(out, inv[:, :, None], axis=1)
         if not tracing:
             self._last_dma = self._dma_report(None, None, 72, streams=streams)
+        return self._head_batched(feats)
+
+    def _batched_forward_device(self, clouds):
+        """The fully-traced batched path: vmapped geometry, a vmapped
+        :func:`~repro.core.schedule.device_build_plan` (unless a prebuilt
+        :class:`DevicePlan` is bound), then exactly one
+        ``aggregate_diff_batched`` gather and one batched MLP apply per SA
+        layer. No per-cloud Python loop and no ``np.asarray`` on geometry
+        — the whole thing is ONE jittable clouds→logits computation
+        (``jit_batched_forward`` wraps it). Same arithmetic per row as the
+        host-planned path, so logits stay bitwise equal to it."""
+        cfg = self.config
+        batch = clouds.shape[0]
+        feats = jax.vmap(
+            lambda c: _pn.lift_features(c, cfg.layers[0].in_features))(clouds)
+        pts_s, ctr_s, nbr_s = jax.vmap(
+            functools.partial(_pn.geometry_pass, cfg))(clouds)
+        if self._dplan is not None:
+            dplan = self._dplan
+            if dplan.batched and dplan.batch_size != batch:
+                raise ValueError(
+                    f"batched DevicePlan is for batch {dplan.batch_size}, "
+                    f"got {batch} clouds")
+        else:
+            intra = self._resolved_intra()
+            coordinated = self._spec["coordinated"]
+            dplan = jax.vmap(
+                lambda lp, nbs: device_build_plan(
+                    nbs, lp, intra=intra, coordinated=coordinated))(
+                pts_s[-1], [nbr_s[k].astype(jnp.int32)
+                            for k in range(1, cfg.n_layers + 1)])
+        for k in range(1, cfg.n_layers + 1):
+            order = dplan.order_of(k)
+            inv = dplan.inverse_of(k)
+            if not dplan.batched:                 # one plan shared batch-wide
+                order = jnp.broadcast_to(order, (batch,) + order.shape)
+                inv = jnp.broadcast_to(inv, (batch,) + inv.shape)
+            nbr_o = jnp.take_along_axis(nbr_s[k].astype(jnp.int32),
+                                        order[:, :, None], axis=1)
+            ctr_o = jnp.take_along_axis(ctr_s[k].astype(jnp.int32),
+                                        order, axis=1)
+            diff = aggregate_diff_batched(feats, nbr_o, ctr_o)  # ONE launch
+            h = self._apply_sa_mlp_batched(k, diff)
+            out = jnp.max(h, axis=2)                     # reduction over K
+            feats = jnp.take_along_axis(out, inv[:, :, None], axis=1)
+        return self._head_batched(feats)
+
+    def _apply_sa_mlp_batched(self, k, diff):
+        if self.backend.batched_in_grid:
+            return self.backend.apply_mlp_batched(("sa", k - 1), diff)
+        return jax.vmap(
+            lambda d, key=("sa", k - 1): self.backend.apply_mlp(key, d))(diff)
+
+    def _head_batched(self, feats):
         g = jnp.max(feats, axis=1)                       # global max pool
         if self.backend.batched_in_grid:
             return self.backend.apply_mlp_batched("head", g, final_relu=False)
@@ -686,6 +825,7 @@ class CompiledModel:
 def compile_model(params: Params, config: PointNetConfig, *,
                   backend: str = "float", schedule=None,
                   policy: PlanPolicy | None = None,
+                  device_planning: bool | None = None,
                   **backend_opts) -> CompiledModel:
     """Compile PointNet++ ``params`` for execution.
 
@@ -710,6 +850,20 @@ def compile_model(params: Params, config: PointNetConfig, *,
                each SA layer in plan order through the ``aggregate_diff``
                gather kernels (fewer DMAs, same logits); device plans are
                jit-safe.
+    device_planning : lower plan CONSTRUCTION (not just execution) into
+               the trace — Algorithm 1 as jnp ops via
+               :func:`~repro.core.schedule.device_build_plan`, so
+               ``forward``/``batched_forward`` become one jittable
+               cloud→logits function with no per-cloud host work (wrap
+               them with ``jit_forward``/``jit_batched_forward``). Default
+               ``None`` auto-enables it whenever the schedule allows
+               (spec-driven planned schedule, concrete intra mode or a
+               single-candidate / :meth:`~repro.core.policy.PlanPolicy.
+               precommit`-ted policy, greedy last layer within
+               ``GREEDY_DENSE_LIMIT``); ``True`` demands it (``ValueError``
+               naming the blocker when it can't hold); ``False`` keeps the
+               PR 5 host planning path, which also collects the measured
+               DMA stream telemetry the traced path skips.
     """
     if not isinstance(backend, str):
         raise TypeError(f"backend must be a registry name string; got "
@@ -728,8 +882,26 @@ def compile_model(params: Params, config: PointNetConfig, *,
         plan, dplan, planned = None, None, True
     else:
         spec, plan, dplan, planned = _canonical_schedule(schedule, config)
+    if planned and dplan is None and spec is not None:
+        blocker = _device_planning_blocker(spec, config, policy)
+        if device_planning is None:
+            device_planning = blocker is None
+        elif device_planning and blocker is not None:
+            raise ValueError(f"device_planning=True impossible for this "
+                             f"schedule: {blocker}")
+    else:
+        # baseline, or a prebuilt ExecutionPlan/DevicePlan: construction
+        # already happened, there is nothing to lower into the trace
+        if device_planning:
+            raise ValueError(
+                "device_planning=True needs a spec-driven planned schedule "
+                "(preset name, {'intra', 'coordinated'} mapping, or "
+                "policy=); baseline and prebuilt plans have no plan "
+                "construction left to lower")
+        device_planning = False
     be = cls(params, config, **backend_opts)
     be.name = backend            # the registry entry actually resolved
     be.policy = policy           # dataflow decisions consult the cost model
     return CompiledModel(be, config, spec, plan, planned,
-                         device_plan=dplan, policy=policy)
+                         device_plan=dplan, policy=policy,
+                         device_planning=bool(device_planning))

@@ -135,6 +135,34 @@ def lift_features(points: jnp.ndarray, n_features: int) -> jnp.ndarray:
     return f[:, :n_features]
 
 
+def geometry_pass(config: PointNetConfig, cloud: jnp.ndarray):
+    """The full FPS/kNN geometry of every SA layer on one cloud, as
+    device tensors that never leave the trace: per layer k = 1..L the
+    FPS-selected coordinates ``pts[k]`` (n_k, 3), center indices
+    ``ctr[k]`` (n_k,) into layer k-1, and receptive fields ``nbr[k]``
+    (n_k, K) into layer k-1 (index 0 holds the input cloud / None / None,
+    matching :class:`~repro.core.workload.PointNetWorkload` layout).
+
+    This is the planning pipeline's input: ``compile_model``'s planned
+    execution builds its gather orders from exactly these tensors —
+    on device via :func:`repro.core.schedule.device_build_plan` (so the
+    whole cloud→logits function jits), or on host after an explicit
+    ``np.asarray`` pull when device planning is off. vmap it for a batch;
+    every output is an ordinary jnp array (int32 indices), so nothing
+    here forces a host sync."""
+    pts_list, ctr_list, nbr_list = [cloud], [None], [None]
+    pts = cloud
+    for spec in config.layers:
+        centers = farthest_point_sample(pts, spec.n_centers)
+        c_pts = pts[centers]
+        nbr = knn(c_pts, pts, spec.n_neighbors)
+        pts_list.append(c_pts)
+        ctr_list.append(centers)
+        nbr_list.append(nbr)
+        pts = c_pts
+    return pts_list, ctr_list, nbr_list
+
+
 def _sa_geometry(spec: SALayerSpec, points, features):
     """The point-mapping + aggregation half of one SA layer on a single
     cloud: FPS centers, k-NN gather, neighbor-minus-center differences.

@@ -223,9 +223,11 @@ def test_pointer_schedule_beats_baseline_elisions():
 
 def test_planned_forward_caches_measured_stream(setup):
     """After a planned forward, ``stats()`` with no cloud reports the DMA
-    elisions of the index stream that actually drove the gather kernel."""
+    elisions of the index stream that actually drove the gather kernel.
+    Stream telemetry is a host pull, so it belongs to the host-planned
+    path — device planning (the default) skips it by contract."""
     cfg, params, cloud = setup
-    m = compile_model(params, cfg, schedule="pointer")
+    m = compile_model(params, cfg, schedule="pointer", device_planning=False)
     assert "dma" not in m.stats()
     m.forward(cloud)
     st = m.stats()
@@ -242,7 +244,7 @@ def test_stats_counts_completed_stream_on_sparse_coverage():
     cfg = tiny_config(n=256, c1=96, c2=4, k=4)   # c2*K < c1: orphans certain
     params = pn.init_params(jax.random.PRNGKey(0), cfg, n_classes=10)
     cloud = jnp.asarray(clustered_cloud(seed=2), jnp.float32)
-    m = compile_model(params, cfg, schedule="pointer")
+    m = compile_model(params, cfg, schedule="pointer", device_planning=False)
     total = sum(s.n_centers * s.n_neighbors for s in cfg.layers)
     predicted = m.stats(np.asarray(cloud))["dma"]
     assert predicted["steps"] == total
@@ -268,10 +270,18 @@ def test_schedule_accepts_prebuilt_execution_plan(setup):
 
 
 def test_planned_schedule_rejects_jit_tracing(setup):
+    """The HOST-planning fallback (device_planning=False) still refuses to
+    trace — its plan is built from concrete geometry. (With the default
+    on-device planning the same schedule jits; see the device-planning
+    tests below.)"""
     cfg, params, cloud = setup
-    m = compile_model(params, cfg, schedule="pointer")
+    m = compile_model(params, cfg, schedule="pointer", device_planning=False)
     with pytest.raises(TypeError, match="ExecutionPlan"):
         jax.jit(m.forward)(cloud)
+    with pytest.raises(TypeError, match="device_planning"):
+        m.jit_forward(cloud)
+    with pytest.raises(TypeError, match="device_planning"):
+        m.jit_batched_forward(jnp.stack([cloud, cloud]))
 
 
 # ---------------------------------------------------------------------------
@@ -390,7 +400,7 @@ def test_batched_plan_caches_per_layer_aggregated_dma_stats(setup):
     across cloud boundaries)."""
     cfg, params, cloud = setup
     clouds = jnp.stack([cloud, cloud * 0.5])
-    m = compile_model(params, cfg, schedule="pointer")
+    m = compile_model(params, cfg, schedule="pointer", device_planning=False)
     m.batched_forward(clouds)
     st = m.stats()
     assert len(st["dma"]["layers"]) == cfg.n_layers
@@ -442,6 +452,147 @@ def test_batched_device_plan_schedule(setup):
         m.batched_forward(jnp.stack([cloud, cloud, cloud]))
     with pytest.raises(ValueError, match="batched"):
         m.forward(cloud)
+
+
+# ---------------------------------------------------------------------------
+# on-device planning (plan CONSTRUCTION inside the trace)
+# ---------------------------------------------------------------------------
+
+def test_device_planning_on_by_default_when_spec_allows(setup):
+    """Spec-driven planned schedules auto-enable on-device planning; the
+    schedules with nothing to lower (baseline, prebuilt plans) and the
+    host-only cases report False."""
+    cfg, params, cloud = setup
+    assert compile_model(params, cfg, schedule="pointer").device_planning
+    assert compile_model(params, cfg,
+                         schedule="pointer-morton").device_planning
+    assert not compile_model(params, cfg).device_planning        # baseline
+    assert not compile_model(params, cfg, schedule="pointer",
+                             device_planning=False).device_planning
+    wl = PointNetWorkload.build(np.asarray(cloud, np.float64), cfg)
+    plan = build_plan(wl, intra="greedy", coordinated=True)
+    assert not compile_model(params, cfg, schedule=plan).device_planning
+
+
+def test_device_planning_blockers_raise_when_forced(setup):
+    """device_planning=True names its blocker: greedy past the dense
+    limit, a per-workload policy choice, or a schedule with no plan
+    construction left to lower."""
+    cfg, params, cloud = setup
+    from repro.core.schedule import GREEDY_DENSE_LIMIT
+    big = PointNetConfig(name="big", n_points=4 * GREEDY_DENSE_LIMIT, layers=(
+        SALayerSpec(n_centers=2 * GREEDY_DENSE_LIMIT, n_neighbors=4,
+                    in_features=4, mlp=(4, 8, 8, 16)),))
+    with pytest.raises(ValueError, match="GREEDY_DENSE_LIMIT"):
+        compile_model(params, big, schedule="pointer", device_planning=True)
+    assert not compile_model(params, big,
+                             schedule="pointer").device_planning  # auto: off
+    # morton has no dense limit — stays device-planned at any size
+    assert compile_model(params, big,
+                         schedule="pointer-morton").device_planning
+    with pytest.raises(ValueError, match="precommit"):
+        compile_model(params, cfg, policy=repro.PlanPolicy(),
+                      device_planning=True)
+    with pytest.raises(ValueError, match="spec-driven"):
+        compile_model(params, cfg, device_planning=True)          # baseline
+
+
+@pytest.mark.parametrize("backend", ["float", "reram-fused"])
+@pytest.mark.parametrize("sched", ["pointer", "pointer-morton", "pointer-1"])
+def test_device_planned_logits_match_host_planned(setup, backend, sched):
+    """Acceptance: the traced plan-construction path reproduces the PR 5
+    host-planned logits bitwise — eager and under jax.jit — on float and
+    reram-fused backends, single and batched."""
+    cfg, params, cloud = setup
+    clouds = jnp.stack([cloud, cloud * 0.5, cloud - 0.2])
+    host = compile_model(params, cfg, backend=backend, schedule=sched,
+                         device_planning=False)
+    dev = compile_model(params, cfg, backend=backend, schedule=sched)
+    assert dev.device_planning and not host.device_planning
+    assert np.array_equal(np.asarray(dev.forward(cloud)),
+                          np.asarray(host.forward(cloud)))
+    bh = np.asarray(host.batched_forward(clouds))
+    assert np.array_equal(np.asarray(dev.batched_forward(clouds)), bh)
+    assert np.array_equal(np.asarray(dev.jit_batched_forward(clouds)), bh)
+
+
+def test_device_planned_batched_forward_jits_without_host_transfers(
+        setup, monkeypatch):
+    """Acceptance: planned ``batched_forward`` traces under jax.jit with
+    plan construction INSIDE the trace — no per-cloud Python loop and no
+    ``np.asarray`` host pull on geometry anywhere in the hot path
+    (monkeypatched to fail on any jax value)."""
+    cfg, params, cloud = setup
+    clouds = jnp.stack([cloud, cloud * 0.5])
+    m = compile_model(params, cfg, schedule="pointer")
+    real_asarray = np.asarray
+
+    def guarded(x, *a, **k):
+        if isinstance(x, (jax.Array, jax.core.Tracer)):
+            raise AssertionError(
+                "np.asarray on a device value in the device-planned path")
+        return real_asarray(x, *a, **k)
+
+    monkeypatch.setattr(np, "asarray", guarded)
+    monkeypatch.setattr(backend_mod.np, "asarray", guarded)
+    eager = m.batched_forward(clouds)          # eager: still no host pull
+    jitted = jax.jit(m.batched_forward)(clouds)
+    monkeypatch.undo()
+    assert np.array_equal(np.asarray(eager), np.asarray(jitted))
+    nll, acc = m.eval_step(clouds, jnp.asarray([1, 7]))   # jitted path
+    assert bool(jnp.isfinite(nll))
+
+
+def test_device_planned_batched_issues_one_gather_per_layer(
+        setup, monkeypatch):
+    """The traced path keeps the PR 5 launch discipline: exactly ONE
+    batch-gridded gather per SA layer, never the per-cloud kernel."""
+    cfg, params, cloud = setup
+    clouds = jnp.stack([cloud, cloud * 0.5, cloud * 2.0])
+    batched_calls, single_calls = [], []
+    real_batched = backend_mod.aggregate_diff_batched
+    monkeypatch.setattr(
+        backend_mod, "aggregate_diff_batched",
+        lambda *a, **k: (batched_calls.append(a[1].shape),
+                         real_batched(*a, **k))[1])
+    monkeypatch.setattr(
+        backend_mod, "aggregate_diff",
+        lambda *a, **k: single_calls.append(a) or (_ for _ in ()).throw(
+            AssertionError("per-cloud gather in batched path")))
+    m = compile_model(params, cfg, schedule="pointer")
+    assert m.device_planning
+    m.batched_forward(clouds)
+    assert len(batched_calls) == cfg.n_layers
+    assert not single_calls
+    assert all(shape[0] == 3 for shape in batched_calls)
+
+
+def test_jit_forward_caches_and_matches(setup):
+    """jit_forward / jit_batched_forward are cached end-to-end jits of the
+    same computation (float drift only from XLA fusion, never order)."""
+    cfg, params, cloud = setup
+    m = compile_model(params, cfg, schedule="pointer-morton")
+    out = m.jit_forward(cloud)
+    assert m._jit_fwd is not None
+    np.testing.assert_allclose(np.asarray(out), np.asarray(m.forward(cloud)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_precommitted_policy_enables_device_planning(setup):
+    """policy.precommit pins the intra decision to one candidate, which is
+    exactly what lets compile_model lower plan construction into the
+    trace; logits match the per-workload policy path bitwise."""
+    cfg, params, cloud = setup
+    clouds = jnp.stack([cloud, cloud * 0.5])
+    wl = PointNetWorkload.build(np.asarray(cloud, np.float64), cfg)
+    pol = repro.PlanPolicy()
+    pre = pol.precommit(wl)
+    assert len(pre.intra_candidates) == 1
+    m_host = compile_model(params, cfg, policy=pol)
+    m_dev = compile_model(params, cfg, policy=pre)
+    assert not m_host.device_planning and m_dev.device_planning
+    assert np.array_equal(np.asarray(m_dev.jit_batched_forward(clouds)),
+                          np.asarray(m_host.batched_forward(clouds)))
 
 
 def test_device_plan_layer_sizes_validated_against_config(setup):

@@ -230,3 +230,39 @@ def test_policy_type_validated(setup):
 def test_public_api_exports_policy_objects():
     for name in ("PlanPolicy", "RooflineParams", "DevicePlan"):
         assert hasattr(repro, name), name
+
+
+def test_precommit_pins_single_candidate(setup):
+    """precommit scores once on a representative workload and returns a
+    policy whose intra choice needs no geometry at all afterwards."""
+    cfg, params, cloud = setup
+    wl = PointNetWorkload.build(np.asarray(cloud, np.float64), cfg)
+    pol = PlanPolicy()
+    pre = pol.precommit(wl)
+    assert len(pre.intra_candidates) == 1
+    assert pre.intra_candidates[0] == pol.build_plan(wl).intra
+    # unchanged cost-model knobs
+    assert pre.window == pol.window and pre.coordinated == pol.coordinated
+
+
+def test_select_intra_rejects_tracers_unless_precommitted(setup):
+    """A multi-candidate policy must refuse traced geometry (it scores on
+    concrete coordinates) instead of silently syncing; a precommitted one
+    answers from its single candidate without touching the points."""
+    cfg, params, cloud = setup
+    wl = PointNetWorkload.build(np.asarray(cloud, np.float64), cfg)
+    pol = PlanPolicy()
+    pre = pol.precommit(wl)
+
+    def probe(policy, pts):
+        traced_wl = PointNetWorkload(
+            config=cfg, points=[pts] * (cfg.n_layers + 1),
+            centers=wl.centers, neighbors=wl.neighbors)
+        return policy.select_intra(traced_wl)
+
+    with pytest.raises(TypeError, match="precommit"):
+        jax.jit(lambda p: (probe(pol, p), p)[1])(jnp.asarray(cloud))
+    # the precommitted policy composes with tracing
+    out = []
+    jax.jit(lambda p: (out.append(probe(pre, p)), p)[1])(jnp.asarray(cloud))
+    assert out == [pre.intra_candidates[0]]
