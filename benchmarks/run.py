@@ -62,6 +62,7 @@ def main(argv=None) -> None:
                              fig9a_traffic, fig9b_buffer_speedup)
     from .kernels_bench import kernels
     from .beyond_schedule import beyond
+    from .serve_bench import serve
 
     wls = workloads(seeds=(0,) if args.quick else (0, 1, 2))
     benches = [
@@ -72,6 +73,7 @@ def main(argv=None) -> None:
         ("fig10", lambda: fig10_hitrate(wls)),
         ("kernel", kernels),
         ("beyond", lambda: beyond(wls)),
+        ("serve", lambda: serve(16 if args.quick else 32)),
     ]
     meta = _metadata(args)
     records = []

@@ -123,6 +123,23 @@ fused kernels only stream activations through it:
 >>> reram_mlp_fused(jnp.ones((2, 4)), prog, final_relu=False).shape
 (2, 8)
 
+**Serving** — the request path over any compiled model
+(``repro.launch.serve``): a FIFO queue with continuous batching, requests
+padded into point-count shape buckets (ONE jit trace per bucket — padded
+logits are bitwise-equal to the unpadded ``forward`` by the bucketing
+contract), and a content-keyed :class:`PlanCache` so repeated clouds skip
+FPS/kNN + Algorithm-1 planning entirely:
+
+>>> from repro import PointCloudServable, ServingEngine, ShapeBuckets
+>>> eng = repro.ServingEngine(repro.PointCloudServable(
+...     dp, buckets=repro.ShapeBuckets(points=(64,), batch=(1, 2, 4))))
+>>> r1, r2 = eng.submit(cloud), eng.submit(cloud)   # same content
+>>> _ = eng.drain()                                 # one batch, one plan
+>>> bool(jnp.all(jnp.asarray(r1.result) == dp.forward(cloud)))
+True
+>>> eng.stats()["plan_cache"]["hits"]               # repeat cloud hit
+1
+
 Everything else stays importable from its submodule (``repro.core``,
 ``repro.kernels``, ``repro.models``, ...); see README.md for the
 backend table and the paper-section → module map.
@@ -130,14 +147,16 @@ backend table and the paper-section → module map.
 from repro.core.energy import RooflineParams
 from repro.core.policy import PlanPolicy
 from repro.core.schedule import (DevicePlan, ExecutionPlan, MODE_PRESETS,
-                                 build_plan)
+                                 PlanCache, build_plan, cloud_content_key)
 from repro.core.workload import (PAPER_MODELS, PointNetConfig,
                                  PointNetWorkload)
 from repro.kernels import CrossbarProgram
+from repro.launch.serve import (LMServable, PointCloudServable, Request,
+                                Servable, ServingEngine, ShapeBuckets)
 from repro.models.backend import (Backend, CompiledModel, available_backends,
                                   compile_model, register_backend)
 
-__version__ = "0.6.0"
+__version__ = "0.7.0"
 
 __all__ = [
     "Backend",
@@ -145,14 +164,22 @@ __all__ = [
     "CrossbarProgram",
     "DevicePlan",
     "ExecutionPlan",
+    "LMServable",
     "MODE_PRESETS",
     "PAPER_MODELS",
+    "PlanCache",
     "PlanPolicy",
+    "PointCloudServable",
     "PointNetConfig",
     "PointNetWorkload",
+    "Request",
     "RooflineParams",
+    "Servable",
+    "ServingEngine",
+    "ShapeBuckets",
     "available_backends",
     "build_plan",
+    "cloud_content_key",
     "compile_model",
     "register_backend",
     "__version__",

@@ -24,8 +24,10 @@ Three scheduling levers (orthogonal, matching the paper's ablation):
 """
 from __future__ import annotations
 
+import hashlib
+from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Literal, Sequence
+from typing import Callable, Literal, Sequence
 
 import numpy as np
 
@@ -34,6 +36,8 @@ from .workload import PointNetWorkload
 __all__ = [
     "ExecutionPlan",
     "DevicePlan",
+    "PlanCache",
+    "cloud_content_key",
     "greedy_nn_order",
     "morton_order",
     "coordinate_layers",
@@ -184,6 +188,37 @@ class DevicePlan:
         return cls(orders, inverses, layer_sizes,
                    intra=p0.intra, coordinated=p0.coordinated)
 
+    @classmethod
+    def stack(cls, plans: Sequence["DevicePlan"]) -> "DevicePlan":
+        """Stack single-cloud :class:`DevicePlan` s along a new leading
+        batch axis — the serving tier's batch assembly: per-request plans
+        come out of the plan cache one at a time and go into
+        ``batched_forward(dplan=...)`` as one batched plan. All plans must
+        share ``layer_sizes`` and be unbatched; ``intra``/``coordinated``
+        provenance is taken from the first (they describe how the orders
+        were built, not what they do — execution only reads the
+        tensors)."""
+        import jax.numpy as jnp
+
+        plan_list = list(plans)
+        if not plan_list:
+            raise ValueError("DevicePlan.stack needs at least one plan")
+        p0 = plan_list[0]
+        for p in plan_list:
+            if p.batched:
+                raise ValueError("DevicePlan.stack takes single-cloud "
+                                 "plans; got a batched one")
+            if p.layer_sizes != p0.layer_sizes:
+                raise ValueError(
+                    f"cannot stack plans with layer sizes {p.layer_sizes} "
+                    f"and {p0.layer_sizes}")
+        orders = [jnp.stack([p.orders[k] for p in plan_list])
+                  for k in range(p0.n_layers)]
+        inverses = [jnp.stack([p.inverses[k] for p in plan_list])
+                    for k in range(p0.n_layers)]
+        return cls(orders, inverses, p0.layer_sizes,
+                   intra=p0.intra, coordinated=p0.coordinated)
+
     @property
     def n_layers(self) -> int:
         return len(self.orders)
@@ -226,6 +261,120 @@ def _register_device_plan() -> None:
 
 
 _register_device_plan()
+
+
+# ---------------------------------------------------------------------------
+# the plan cache: content-keyed geometry/plan reuse (serving tier)
+# ---------------------------------------------------------------------------
+
+def cloud_content_key(cloud, n_valid: int | None = None) -> str:
+    """Content hash of one cloud's REAL rows — the plan-cache key.
+
+    blake2b over the raw bytes of ``cloud[:n_valid]`` (C-contiguous,
+    host-pulled) plus the trimmed shape and dtype, so a cloud and its
+    shape-bucket-padded copy hash identically (pads carry no plan
+    information: masked FPS/kNN never select them — the bucketing contract
+    in ``repro.models.backend``), while any byte-level change to a real
+    coordinate misses.
+
+    Deliberately row-order-SENSITIVE: FPS is a function of row order (it
+    starts at row 0 and ``argmax`` tie-breaks by index), so a permuted
+    copy of the same point set has different geometry and needs a
+    different plan — two permuted-but-identical clouds must NOT collide
+    (tested). Keys are hex strings: stable across processes, printable in
+    ``stats()``."""
+    arr = np.ascontiguousarray(np.asarray(cloud))
+    if n_valid is not None:
+        arr = np.ascontiguousarray(arr[:int(n_valid)])
+    h = hashlib.blake2b(digest_size=16)
+    h.update(str((arr.shape, arr.dtype.str)).encode())
+    h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+class PlanCache:
+    """Content-keyed LRU cache of single-cloud :class:`DevicePlan` s.
+
+    The serving tier's geometry shortcut: repeated or temporally-coherent
+    clouds (the paper's streaming-inference setting — consecutive LiDAR
+    sweeps) hash to keys already seen, so planning is skipped entirely —
+    ``device_build_plan`` never runs for a hit (device path), and neither
+    does the host Algorithm-1 walk (host path). Values are device-resident
+    int32 tensors (~``2 * sum(n_k) * 4`` bytes each), so ``capacity`` is
+    cheap to keep in the hundreds.
+
+    Eviction is least-recently-USED: ``get`` hits refresh recency, and
+    inserting past ``capacity`` drops the coldest entry (counted in
+    ``evictions``). ``stats()`` surfaces hits/misses/evictions plus the
+    derived ``hit_rate`` — the serving engine merges this into its own
+    ``stats()``.
+
+    Invalidation: content addressing makes stale entries unreachable
+    rather than wrong — a plan is a pure function of the cloud's real
+    rows and the model's schedule spec, so use one cache per compiled
+    model (different schedules map the same key to different plans) and
+    ``clear()`` on model swap."""
+
+    def __init__(self, capacity: int = 256):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1; got {capacity}")
+        self.capacity = int(capacity)
+        self._entries: OrderedDict[str, DevicePlan] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._entries
+
+    def get(self, key: str) -> DevicePlan | None:
+        """The cached plan for ``key`` (refreshing its recency), or None —
+        counted as a hit/miss."""
+        plan = self._entries.get(key)
+        if plan is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        return plan
+
+    def put(self, key: str, plan: DevicePlan) -> None:
+        """Insert (or refresh) ``key``; evicts the least-recently-used
+        entry when past capacity."""
+        if key in self._entries:
+            self._entries.move_to_end(key)
+        self._entries[key] = plan
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    def get_or_build(self, key: str,
+                     build: Callable[[], DevicePlan]) -> DevicePlan:
+        """``get(key)``, calling ``build()`` and caching its result on a
+        miss — the one-liner the serving engine uses per request."""
+        plan = self.get(key)
+        if plan is None:
+            plan = build()
+            self.put(key, plan)
+        return plan
+
+    def clear(self) -> None:
+        """Drop every entry (counters keep accumulating — they describe
+        the cache's lifetime, not its current contents)."""
+        self._entries.clear()
+
+    def stats(self) -> dict:
+        """``{'size', 'capacity', 'hits', 'misses', 'evictions',
+        'hit_rate'}`` — hit_rate over all lookups so far (0.0 before
+        any)."""
+        total = self.hits + self.misses
+        return {"size": len(self._entries), "capacity": self.capacity,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "hit_rate": self.hits / total if total else 0.0}
 
 
 #: Above this many points ``greedy_nn_order`` recomputes distances per step

@@ -14,7 +14,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
-__all__ = ["synthetic_cloud", "PointCloudDataset", "N_CLASSES"]
+__all__ = ["synthetic_cloud", "PointCloudDataset", "request_stream",
+           "N_CLASSES"]
 
 N_CLASSES = 40
 _PRIMITIVES = 8     # x 5 deformation levels = 40 classes
@@ -130,3 +131,37 @@ class PointCloudDataset:
         raise NotImplementedError(
             "offline container: drop ModelNet40 .npz files under "
             f"{path} and implement the trivial loader here")
+
+
+def request_stream(n_requests: int, *, rate_hz: float = 200.0,
+                   n_points=(1024,), pool: int = 8,
+                   repeat_p: float = 0.7, seed: int = 0):
+    """Timed request arrivals for the serving tier: yields ``n_requests``
+    tuples ``(t_arrival, cloud, label)`` with Poisson arrivals at
+    ``rate_hz`` (exponential inter-arrival gaps).
+
+    Clouds come from a ``pool`` of distinct synthetic clouds; each request
+    repeats an already-seen pool member with probability ``repeat_p`` —
+    the temporally-coherent stream of the paper's driving setting
+    (consecutive sweeps see the same objects), and exactly what the
+    content-keyed plan cache exploits: a repeated cloud is a guaranteed
+    cache hit, so a stream at ``repeat_p > 0`` measures hit-rate > 0.
+    Pool members draw their point count from ``n_points`` (cycled), so a
+    multi-bucket stream exercises bucketed batching too."""
+    if not 0.0 <= repeat_p <= 1.0:
+        raise ValueError(f"repeat_p must be in [0, 1]; got {repeat_p}")
+    rng = np.random.default_rng(seed)
+    sizes = tuple(int(n) for n in n_points)
+    members = [synthetic_cloud(i % N_CLASSES, sizes[i % len(sizes)],
+                               seed=seed * 7919 + i)
+               for i in range(pool)]
+    seen: list[int] = []
+    t = 0.0
+    for _ in range(n_requests):
+        t += float(rng.exponential(1.0 / rate_hz))
+        if seen and rng.uniform() < repeat_p:
+            idx = int(seen[int(rng.integers(len(seen)))])
+        else:
+            idx = int(rng.integers(pool))
+        seen.append(idx)
+        yield t, members[idx], idx % N_CLASSES

@@ -1,2 +1,67 @@
-"""Distributed runtime: production mesh, sharding rules, trainer, server,
-multi-pod dry-run, roofline analysis, fault tolerance."""
+"""Distributed runtime + serving tier: request engine over CompiledModel,
+production mesh, sharding rules, trainer, multi-pod dry-run, roofline
+analysis, fault tolerance.
+
+The serving surface (``repro.launch.serve``) in one example — any
+registered backend serves through the same engine; results are
+bitwise-equal to the direct per-request ``forward`` (the bucketing
+contract in ``repro.models.backend``):
+
+>>> import jax, jax.numpy as jnp, numpy as np
+>>> from repro.core.workload import PointNetConfig, SALayerSpec
+>>> from repro.models.pointnet2 import init_params
+>>> from repro.models.backend import compile_model
+>>> from repro.launch import PointCloudServable, ServingEngine, ShapeBuckets
+>>> cfg = PointNetConfig(name="tiny", n_points=64, layers=(
+...     SALayerSpec(n_centers=24, n_neighbors=4, in_features=4,
+...                 mlp=(4, 8, 8, 16)),
+...     SALayerSpec(n_centers=8, n_neighbors=4, in_features=16,
+...                 mlp=(16, 16, 16, 32))))
+>>> params = init_params(jax.random.PRNGKey(0), cfg, n_classes=10)
+>>> model = compile_model(params, cfg, schedule="pointer")
+>>> engine = ServingEngine(PointCloudServable(
+...     model, buckets=ShapeBuckets(points=(64,), batch=(1, 2, 4))))
+>>> rng = np.random.default_rng(0)
+>>> cloud = rng.normal(size=(64, 3)).astype(np.float32)
+>>> reqs = [engine.submit(cloud), engine.submit(cloud * 0.5)]
+>>> _ = engine.drain()
+>>> bool(jnp.all(jnp.asarray(reqs[0].result) ==
+...              model.forward(jnp.asarray(cloud))))
+True
+>>> engine.stats()["plan_cache"]["misses"]      # 2 distinct clouds
+2
+>>> _ = engine.submit(cloud); _ = engine.drain()
+>>> engine.stats()["plan_cache"]["hits"]        # repeat -> planning skipped
+1
+"""
+from repro.launch.mesh import (MESH_AXES, batch_axes, make_production_mesh,
+                               make_replica_mesh, make_test_mesh)
+from repro.launch.serve import (LMServable, PointCloudServable, Request,
+                                Servable, ServingEngine, ShapeBuckets,
+                                generate, make_serve_step)
+from repro.launch.sharding import (cache_pspecs, input_pspecs,
+                                   named_shardings, param_pspecs,
+                                   replica_pspecs, shard_batch, state_pspecs)
+
+__all__ = [
+    "LMServable",
+    "MESH_AXES",
+    "PointCloudServable",
+    "Request",
+    "Servable",
+    "ServingEngine",
+    "ShapeBuckets",
+    "batch_axes",
+    "cache_pspecs",
+    "generate",
+    "input_pspecs",
+    "make_production_mesh",
+    "make_replica_mesh",
+    "make_serve_step",
+    "make_test_mesh",
+    "named_shardings",
+    "param_pspecs",
+    "replica_pspecs",
+    "shard_batch",
+    "state_pspecs",
+]

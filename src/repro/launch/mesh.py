@@ -16,10 +16,22 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_test_mesh", "batch_axes",
-           "MESH_AXES"]
+__all__ = ["make_production_mesh", "make_test_mesh", "make_replica_mesh",
+           "batch_axes", "MESH_AXES"]
 
 MESH_AXES = {"single": ("data", "model"), "multi": ("pod", "data", "model")}
+
+
+def make_replica_mesh(n_replicas: int | None = None, *,
+                      axis: str = "replica") -> jax.sharding.Mesh:
+    """1-D data-parallel mesh for ``CompiledModel`` replica fan-out (the
+    serving tier): ``n_replicas`` devices (default: all local devices)
+    along one ``axis``. PointNet++ models are small enough to replicate
+    whole — only the request batch shards (``repro.launch.sharding.
+    shard_batch``) — so this is the entire mesh story for serving, unlike
+    the LM's (data, model) factorization."""
+    n = len(jax.devices()) if n_replicas is None else int(n_replicas)
+    return jax.make_mesh((n,), (axis,))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:

@@ -1,22 +1,322 @@
-"""Batched serving: prefill + sampled decode loop.
+"""Model-agnostic serving tier: one engine over any ``CompiledModel``.
 
-``generate`` is the building block (used by examples/serve_lm.py and the
-integration tests); ``serve_step`` — a single jit'd decode step over a
-cache — is exactly what the dry-run lowers for the decode_32k / long_500k
-shapes.
+The paper's setting is latency-bound streaming inference (LiDAR sweeps
+arriving continuously); this module is the software tier that turns the
+repo's compiled artifacts into a request path:
+
+  ``ServingEngine``       — FIFO request queue + continuous batching: each
+                            step takes the oldest request, skims every
+                            queued request in the SAME shape bucket (up to
+                            the batch limit), and runs them as one batch.
+  ``PointCloudServable``  — the point-cloud adapter over ``CompiledModel``:
+                            pads requests into point-count shape buckets so
+                            the jitted batched forward retraces only once
+                            per bucket (the bucketing contract in
+                            ``repro.models.backend`` makes padded logits
+                            bitwise-equal to the unpadded ``forward``),
+                            reuses plans through a content-keyed
+                            :class:`~repro.core.schedule.PlanCache`, and
+                            optionally fans batches across a replica mesh.
+  ``LMServable``          — the LM adapter: the pre-existing ``generate``
+                            path (prefill + sampled decode) as a servable,
+                            with the jitted prefill/decode-step callables
+                            hoisted into module caches so repeated calls
+                            never retrace (they used to re-jit through a
+                            fresh ``lambda`` per call).
+
+``generate`` keeps its exact signature and stats keys but now runs as a
+thin client of the same engine. ``make_serve_step`` is unchanged — it is
+what the dry-run lowers for the decode_32k / long_500k shapes.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
+from dataclasses import dataclass
 from functools import partial
+from typing import Any, Callable, Iterable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.schedule import DevicePlan, PlanCache, cloud_content_key
 from repro.models import lm
 
-__all__ = ["make_serve_step", "generate"]
+__all__ = [
+    "ShapeBuckets",
+    "Request",
+    "Servable",
+    "PointCloudServable",
+    "LMServable",
+    "ServingEngine",
+    "make_serve_step",
+    "generate",
+]
+
+
+# ---------------------------------------------------------------------------
+# shape buckets
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeBuckets:
+    """The discrete shapes the serving tier is allowed to run.
+
+    ``points`` are the point-count buckets (ascending): a request of n
+    points is padded up to the smallest bucket >= n, so the jitted batched
+    forward sees at most ``len(points) * len(batch)`` distinct shapes —
+    ever — and every later request hits a warm jit cache. ``batch`` are
+    the batch-size buckets the same way (short batches pad by replicating
+    row 0; the pads are discarded before results leave the servable).
+    """
+
+    points: tuple[int, ...] = (1024,)
+    batch: tuple[int, ...] = (1, 2, 4, 8)
+
+    def __post_init__(self):
+        if (not self.points or not self.batch
+                or tuple(sorted(self.points)) != tuple(self.points)
+                or tuple(sorted(self.batch)) != tuple(self.batch)):
+            raise ValueError("ShapeBuckets needs non-empty ascending "
+                             "'points' and 'batch' tuples")
+
+    @property
+    def max_batch(self) -> int:
+        return self.batch[-1]
+
+    def point_bucket(self, n: int) -> int:
+        """Smallest point bucket >= n (ValueError past the largest — the
+        engine must never silently truncate a cloud)."""
+        for b in self.points:
+            if n <= b:
+                return b
+        raise ValueError(f"cloud with {n} points exceeds the largest "
+                         f"point bucket {self.points[-1]}")
+
+    def batch_bucket(self, b: int) -> int:
+        for bb in self.batch:
+            if b <= bb:
+                return bb
+        raise ValueError(f"batch of {b} exceeds the largest batch bucket "
+                         f"{self.batch[-1]}")
+
+
+# ---------------------------------------------------------------------------
+# requests + the servable protocol
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Request:
+    """One queued unit of work. ``payload`` is whatever the servable
+    understands (a cloud for ``PointCloudServable``, a 1-D prompt for
+    ``LMServable``); ``result`` and ``t_done`` are filled by the engine."""
+
+    id: int
+    payload: Any
+    t_arrival: float = 0.0
+    result: Any = None
+    t_done: float | None = None
+
+    @property
+    def latency(self) -> float | None:
+        return None if self.t_done is None else self.t_done - self.t_arrival
+
+
+class Servable:
+    """What the engine needs from a model adapter. ``bucket_of`` maps a
+    payload to a hashable bucket key (requests batch together iff their
+    keys are equal); ``run_batch`` executes one same-bucket batch and
+    returns one result per payload, in order; ``max_batch`` bounds batch
+    assembly; ``stats`` reports adapter-side counters."""
+
+    max_batch: int = 8
+
+    def bucket_of(self, payload) -> Any:
+        raise NotImplementedError
+
+    def run_batch(self, payloads: list) -> list:
+        raise NotImplementedError
+
+    def stats(self) -> dict:
+        return {}
+
+
+# ---------------------------------------------------------------------------
+# point clouds: the CompiledModel adapter
+# ---------------------------------------------------------------------------
+
+class PointCloudServable(Servable):
+    """Serve any :class:`~repro.models.backend.CompiledModel` (any backend,
+    any schedule).
+
+    Request lifecycle: bucket (pad the cloud with zero rows up to its
+    point bucket) → batch (stack same-bucket requests; pad the batch dim
+    to a batch bucket by replicating row 0) → ONE jitted
+    ``batched_forward(clouds, n_valid=..., dplan=...)`` → unpad (drop the
+    replicated rows). The bucketing contract guarantees each returned row
+    is bitwise-equal to ``model.forward(cloud)`` on the bare request.
+
+    The plan cache (on by default for planned schedules) keys each
+    request's REAL rows by content hash: a repeated cloud skips FPS/kNN +
+    Algorithm 1 entirely — its :class:`DevicePlan` is stacked straight
+    into the batch. Cache misses build through
+    ``model.build_device_plan``; hits/misses surface in :meth:`stats`.
+    For host-planning models the cache is also what makes the whole step
+    jittable (the plan becomes a device operand instead of a host loop).
+
+    ``mesh`` (a 1-D replica mesh from
+    :func:`repro.launch.mesh.make_replica_mesh`) shards the batch
+    dimension of every operand across replicas before the jitted step;
+    jit follows the operand sharding, so each replica runs its slice of
+    the batch. Batch buckets should be multiples of the replica count —
+    non-divisible batches fall back to replicated (correct, not faster) —
+    and at least 2x it for bitwise-equal results: a lone cloud per replica
+    is the singleton-batch case again (XLA collapses the local unit batch
+    dim and re-fuses the float matmuls).
+    """
+
+    def __init__(self, model, *, buckets: ShapeBuckets | None = None,
+                 plan_cache: PlanCache | bool | None = True,
+                 mesh=None):
+        self.model = model
+        self.buckets = buckets if buckets is not None else ShapeBuckets()
+        self.max_batch = self.buckets.max_batch
+        self.mesh = mesh
+        # compile-time plans need no per-request planning; 'baseline' has
+        # no plan at all — the cache only earns its keep for per-cloud
+        # planned schedules
+        cacheable = model.planned and model.device_plan is None
+        if plan_cache is True:
+            self.plan_cache = PlanCache() if cacheable else None
+        elif plan_cache in (False, None):
+            self.plan_cache = None
+        else:
+            if not cacheable:
+                raise ValueError(
+                    "plan_cache= was given but this model has no "
+                    "per-cloud plan to cache (baseline schedule or "
+                    "compile-time DevicePlan)")
+            self.plan_cache = plan_cache
+        self.requests = 0
+        self.batches = 0
+        self.jit_traces = 0
+        self.trace_shapes: list[tuple[int, int]] = []
+        self._jit_step = jax.jit(self._step)
+        # cache misses build the plan OUTSIDE the serving step; for
+        # device-planning models the whole build (masked FPS/kNN +
+        # Algorithm 1) is traceable, so compile it once per point bucket —
+        # eager lax over the plan construction is orders of magnitude
+        # slower. Host-planning models build on host (NumPy) instead.
+        self._jit_build = (jax.jit(
+            lambda c, nv: model.build_device_plan(c, n_valid=nv))
+            if self.plan_cache is not None and model.device_planning
+            else None)
+
+    # the body below runs ONCE per (shape, dplan-structure) — at trace
+    # time — so the counters measure exactly what bucketing is meant to
+    # bound: how often XLA recompiles the serving step
+    def _step(self, clouds, n_valid, dplan):
+        self.jit_traces += 1
+        self.trace_shapes.append((int(clouds.shape[0]),
+                                  int(clouds.shape[1])))
+        return self.model.batched_forward(clouds, n_valid=n_valid,
+                                          dplan=dplan)
+
+    def bucket_of(self, payload) -> int:
+        return self.buckets.point_bucket(np.asarray(payload).shape[0])
+
+    def _plan_for(self, padded, n: int):
+        key = cloud_content_key(padded, n_valid=n)
+        if self._jit_build is not None:
+            build = lambda: self._jit_build(jnp.asarray(padded),
+                                            jnp.int32(n))
+        else:
+            build = lambda: self.model.build_device_plan(padded, n_valid=n)
+        return self.plan_cache.get_or_build(key, build)
+
+    def run_batch(self, payloads: list) -> list:
+        clouds = [np.asarray(p, np.float32) for p in payloads]
+        n_bucket = self.buckets.point_bucket(clouds[0].shape[0])
+        b_real = len(clouds)
+        b_bucket = self.buckets.batch_bucket(b_real)
+        if b_bucket == 1:
+            # never run a TRUE singleton batch: XLA collapses the unit
+            # batch dim and re-fuses the float matmuls, which breaks the
+            # bitwise tie between the batched step and the per-request
+            # eager forward; one replicated row keeps the vmapped program
+            # intact at negligible cost in the latency-bound regime
+            b_bucket = 2
+        padded = np.zeros((b_bucket, n_bucket, 3), np.float32)
+        n_valid = np.empty((b_bucket,), np.int32)
+        for i, c in enumerate(clouds):
+            padded[i, :c.shape[0]] = c
+            n_valid[i] = c.shape[0]
+        padded[b_real:] = padded[0]          # batch pads: replicate row 0
+        n_valid[b_real:] = n_valid[0]
+
+        dplan = None
+        if self.plan_cache is not None:
+            plans = [self._plan_for(padded[i], int(n_valid[i]))
+                     for i in range(b_real)]
+            plans += [plans[0]] * (b_bucket - b_real)   # pads reuse row 0's
+            dplan = DevicePlan.stack(plans)
+
+        clouds_d = jnp.asarray(padded)
+        nv_d = jnp.asarray(n_valid)
+        if self.mesh is not None:
+            from repro.launch.sharding import shard_batch
+            clouds_d, nv_d, dplan = shard_batch(
+                (clouds_d, nv_d, dplan), self.mesh)
+        # the host-planning fallback (planned model, cache off, no traced
+        # plan construction) cannot live under jit — everything else runs
+        # through the ONE cached jitted step per bucket shape
+        jittable = (dplan is not None or not self.model.planned
+                    or self.model.device_planning
+                    or self.model.device_plan is not None)
+        if jittable:
+            logits = self._jit_step(clouds_d, nv_d, dplan)
+        else:
+            logits = self.model.batched_forward(clouds_d, n_valid=nv_d)
+        self.requests += b_real
+        self.batches += 1
+        return list(logits[:b_real])
+
+    def stats(self) -> dict:
+        s = {"requests": self.requests, "batches": self.batches,
+             "jit_traces": self.jit_traces,
+             "trace_shapes": list(self.trace_shapes)}
+        if self.plan_cache is not None:
+            s["plan_cache"] = self.plan_cache.stats()
+        return s
+
+
+# ---------------------------------------------------------------------------
+# LMs: prefill + sampled decode as a servable
+# ---------------------------------------------------------------------------
+
+# jitted callables hoisted out of `generate`, keyed on the (hashable,
+# frozen) ArchConfig — the old per-call ``jax.jit(lambda ...)`` created a
+# fresh jit object every call, so its trace cache NEVER hit and every
+# request re-traced prefill. One entry per (cfg, max_seq) now; the
+# regression test asserts one trace across two calls.
+_PREFILL_CACHE: dict = {}
+_STEP_CACHE: dict = {}
+
+
+def _jit_prefill(cfg: ArchConfig, max_seq: int):
+    key = (cfg, int(max_seq))
+    if key not in _PREFILL_CACHE:
+        _PREFILL_CACHE[key] = jax.jit(
+            partial(lm.prefill, cfg=cfg, max_seq=max_seq))
+    return _PREFILL_CACHE[key]
+
+
+def _jit_step(cfg: ArchConfig):
+    if cfg not in _STEP_CACHE:
+        _STEP_CACHE[cfg] = jax.jit(make_serve_step(cfg))
+    return _STEP_CACHE[cfg]
 
 
 def make_serve_step(cfg: ArchConfig):
@@ -27,44 +327,215 @@ def make_serve_step(cfg: ArchConfig):
     return serve_step
 
 
+class LMServable(Servable):
+    """The LM ``generate`` path as a servable: payloads are 1-D int32
+    prompts, bucketed on exact length (same-length prompts batch; decode
+    state is per-batch so there is no cross-length padding story here —
+    point clouds are where the padding contract lives). ``run_batch``
+    stacks the batch, runs one cached-jit prefill and ``max_new_tokens``
+    cached-jit decode steps, and returns the full (prompt + generated)
+    row per request. Timing accumulates on the instance; ``generate``
+    turns it into the historical stats dict."""
+
+    def __init__(self, params, cfg: ArchConfig, *, max_new_tokens: int = 32,
+                 temperature: float = 0.0, key=None, image_embeds=None,
+                 max_batch: int = 8):
+        self.params = params
+        self.cfg = cfg
+        self.max_new_tokens = int(max_new_tokens)
+        self.temperature = float(temperature)
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        self.image_embeds = image_embeds
+        self.max_batch = int(max_batch)
+        self.requests = 0
+        self.batches = 0
+        self.prefill_s = 0.0
+        self.decode_s = 0.0
+        self.tokens = 0
+
+    def bucket_of(self, payload) -> tuple:
+        return ("lm", int(np.asarray(payload).shape[-1]))
+
+    def _sample(self, logits, key):
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.temperature).astype(jnp.int32)
+
+    def run_batch(self, payloads: list) -> list:
+        prompts = jnp.stack([jnp.asarray(p, jnp.int32) for p in payloads])
+        b, s = prompts.shape
+        t0 = time.monotonic()
+        logits, cache = _jit_prefill(self.cfg, s + self.max_new_tokens)(
+            self.params, ids=prompts, image_embeds=self.image_embeds)
+        jax.block_until_ready(logits)
+        t1 = time.monotonic()
+        step = _jit_step(self.cfg)
+        self.key, key = jax.random.split(self.key)
+        toks = [self._sample(logits, key)]
+        for i in range(self.max_new_tokens - 1):
+            self.key, key = jax.random.split(self.key)
+            lg, cache = step(self.params, cache, toks[-1][:, None],
+                             jnp.int32(s + i),
+                             image_embeds=self.image_embeds)
+            toks.append(self._sample(lg, key))
+        jax.block_until_ready(toks[-1])
+        t2 = time.monotonic()
+        self.prefill_s += t1 - t0
+        self.decode_s += t2 - t1
+        self.tokens += b * self.max_new_tokens
+        self.requests += b
+        self.batches += 1
+        out = jnp.concatenate([prompts, jnp.stack(toks, axis=1)], axis=1)
+        return list(out)
+
+    def stats(self) -> dict:
+        return {"requests": self.requests, "batches": self.batches,
+                "prefill_s": self.prefill_s, "decode_s": self.decode_s,
+                "decode_tok_per_s":
+                    self.tokens / max(self.decode_s, 1e-9)}
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+class ServingEngine:
+    """FIFO queue + continuous batching over one :class:`Servable`.
+
+    :meth:`step` forms one batch per call: the head request fixes the
+    shape bucket, every queued request in the same bucket joins (FIFO
+    order preserved within the bucket; other buckets keep their place for
+    the next step) up to ``max_batch``, and the batch runs as one
+    ``run_batch``. :meth:`drain` steps until empty; :meth:`serve_stream`
+    replays a timed arrival stream against a virtual clock — service time
+    is the measured wall time of each batch — and reports p50/p99 request
+    latency and throughput, the serve bench's measurement core.
+    """
+
+    def __init__(self, servable: Servable, *, max_batch: int | None = None):
+        self.servable = servable
+        self.max_batch = (servable.max_batch if max_batch is None
+                          else min(int(max_batch), servable.max_batch))
+        self.queue: deque[Request] = deque()
+        self._next_id = 0
+        self.completed: list[Request] = []
+
+    def submit(self, payload, *, t: float = 0.0) -> Request:
+        """Enqueue one request (``t`` is its arrival time on whatever
+        clock the caller keeps) and return its :class:`Request` handle —
+        ``result`` is filled when a :meth:`step` serves it."""
+        req = Request(id=self._next_id, payload=payload, t_arrival=t)
+        self._next_id += 1
+        self.queue.append(req)
+        return req
+
+    def step(self, *, now: float = 0.0) -> list[Request]:
+        """Serve ONE batch (see class docstring) and return the completed
+        requests; [] when the queue is empty."""
+        if not self.queue:
+            return []
+        bucket = self.servable.bucket_of(self.queue[0].payload)
+        batch: list[Request] = []
+        rest: deque[Request] = deque()
+        while self.queue:
+            req = self.queue.popleft()
+            if (len(batch) < self.max_batch
+                    and self.servable.bucket_of(req.payload) == bucket):
+                batch.append(req)
+            else:
+                rest.append(req)
+        self.queue = rest
+        results = self.servable.run_batch([r.payload for r in batch])
+        for req, res in zip(batch, results):
+            req.result = res
+            req.t_done = now
+        self.completed.extend(batch)
+        return batch
+
+    def drain(self, *, now: float = 0.0) -> list[Request]:
+        """Step until the queue is empty; returns everything completed by
+        this call, in completion order."""
+        done: list[Request] = []
+        while self.queue:
+            done.extend(self.step(now=now))
+        return done
+
+    def serve_stream(self, stream: Iterable, *,
+                     payload_of: Callable = None) -> dict:
+        """Replay ``stream`` — an iterable of ``(t_arrival, payload)`` (or
+        longer tuples; extra fields are ignored) — under a virtual clock:
+        requests are admitted when the clock passes their arrival time,
+        each batch advances the clock by its measured wall time, and an
+        empty queue fast-forwards to the next arrival. Returns latency /
+        throughput stats (p50/p99 in ms) merged with the servable's own
+        counters (plan-cache hit rate, trace counts, ...)."""
+        arrivals = deque(stream)
+        clock = 0.0
+        latencies: list[float] = []
+        n_served = 0
+        while arrivals or self.queue:
+            if not self.queue and arrivals:
+                clock = max(clock, float(arrivals[0][0]))
+            while arrivals and float(arrivals[0][0]) <= clock:
+                item = arrivals.popleft()
+                payload = item[1] if payload_of is None else payload_of(item)
+                self.submit(payload, t=float(item[0]))
+            t0 = time.monotonic()
+            served = self.step(now=clock)
+            if served:
+                # jax dispatch is asynchronous — a latency measurement
+                # must wait for the logits, not the dispatch
+                jax.block_until_ready([r.result for r in served])
+            dt = time.monotonic() - t0
+            clock += dt
+            for req in served:
+                req.t_done = clock
+                latencies.append(req.latency)
+            n_served += len(served)
+        lat = (np.asarray(latencies, np.float64) if latencies
+               else np.zeros(1))
+        stats = {"n_requests": n_served, "wall_s": clock,
+                 "throughput_rps": n_served / max(clock, 1e-9),
+                 "p50_ms": float(np.percentile(lat, 50)) * 1e3,
+                 "p99_ms": float(np.percentile(lat, 99)) * 1e3,
+                 "mean_ms": float(lat.mean()) * 1e3}
+        stats.update(self.servable.stats())
+        return stats
+
+    def stats(self) -> dict:
+        """Engine-side queue counters merged with the servable's."""
+        s = {"queued": len(self.queue), "completed": len(self.completed)}
+        s.update(self.servable.stats())
+        return s
+
+
+# ---------------------------------------------------------------------------
+# the historical LM entry point, now a thin engine client
+# ---------------------------------------------------------------------------
+
 def generate(params, cfg: ArchConfig, prompts: jnp.ndarray, *,
              max_new_tokens: int = 32, temperature: float = 0.0,
              key=None, image_embeds=None, verbose: bool = False):
-    """prompts (B, S) int32 -> (B, S + max_new_tokens) with timing stats."""
+    """prompts (B, S) int32 -> (B, S + max_new_tokens) with timing stats.
+
+    Same signature and stats keys as always, but the work now flows
+    through :class:`ServingEngine` + :class:`LMServable` — one cached-jit
+    prefill and decode step per (cfg, max_seq), shared with every other
+    client of the engine (calling this twice traces once)."""
     b, s = prompts.shape
-    key = key if key is not None else jax.random.PRNGKey(0)
-    t0 = time.monotonic()
-    logits, cache = jax.jit(
-        partial(lm.prefill, cfg=cfg, max_seq=s + max_new_tokens)
-    )(params, ids=prompts, image_embeds=image_embeds) \
-        if image_embeds is not None else jax.jit(
-        lambda p, i: lm.prefill(p, cfg, i, max_seq=s + max_new_tokens)
-    )(params, prompts)
-    jax.block_until_ready(logits)
-    t_prefill = time.monotonic() - t0
-
-    step = jax.jit(make_serve_step(cfg))
-
-    def sample(lg, k):
-        if temperature <= 0.0:
-            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(k, lg / temperature).astype(jnp.int32)
-
-    toks = [sample(logits, key)]
-    t1 = time.monotonic()
-    for i in range(max_new_tokens - 1):
-        key, sub = jax.random.split(key)
-        lg, cache = step(params, cache, toks[-1][:, None],
-                         jnp.int32(s + i),
-                         image_embeds=image_embeds)
-        toks.append(sample(lg, sub))
-    jax.block_until_ready(toks[-1])
-    t_decode = time.monotonic() - t1
-    out = jnp.concatenate([prompts, jnp.stack(toks, axis=1)], axis=1)
-    stats = {"prefill_s": t_prefill,
-             "decode_tok_per_s": b * max_new_tokens / max(t_decode, 1e-9),
-             "decode_s": t_decode}
+    servable = LMServable(params, cfg, max_new_tokens=max_new_tokens,
+                          temperature=temperature, key=key,
+                          image_embeds=image_embeds, max_batch=b)
+    engine = ServingEngine(servable)
+    reqs = [engine.submit(prompts[i]) for i in range(b)]
+    engine.drain()
+    out = jnp.stack([r.result for r in reqs])
+    st = servable.stats()
+    stats = {"prefill_s": st["prefill_s"],
+             "decode_tok_per_s": st["decode_tok_per_s"],
+             "decode_s": st["decode_s"]}
     if verbose:
-        print(f"[serve] prefill {t_prefill*1e3:.1f} ms, "
+        print(f"[serve] prefill {stats['prefill_s']*1e3:.1f} ms, "
               f"{stats['decode_tok_per_s']:.1f} tok/s")
     return out, stats

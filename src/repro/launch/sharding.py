@@ -25,7 +25,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["param_pspecs", "input_pspecs", "cache_pspecs",
-            "named_shardings", "state_pspecs"]
+            "named_shardings", "state_pspecs", "replica_pspecs",
+            "shard_batch"]
 
 _MIN_SHARD_SIZE = 1 << 20          # replicate anything smaller (1M elems)
 
@@ -172,3 +173,40 @@ def named_shardings(pspecs, mesh: Mesh):
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), pspecs,
         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# generic CompiledModel replication (serving tier)
+# ---------------------------------------------------------------------------
+#
+# The LM rules above are name-based on the param tree — useless for an
+# arbitrary CompiledModel batch. Replica fan-out needs exactly one rule:
+# shard the leading (batch) dimension of every operand over the replica
+# axis when it divides, replicate otherwise. Params stay host-side
+# closures of the compiled model (small for PointNet++), so only the
+# per-step operands — clouds, n_valid, a batched DevicePlan — move.
+
+def replica_pspecs(tree, mesh: Mesh, *, axis: str = "replica"):
+    """PartitionSpec pytree for batch operands on a 1-D replica mesh
+    (:func:`repro.launch.mesh.make_replica_mesh`): leading dim over
+    ``axis`` when divisible by the replica count, else fully replicated
+    (correct for stragglers like scalars and non-divisible batches)."""
+    n = mesh.shape[axis]
+
+    def spec(leaf):
+        arr = jnp.shape(leaf)
+        if len(arr) >= 1 and arr[0] % n == 0:
+            return P(axis, *([None] * (len(arr) - 1)))
+        return P()
+    return jax.tree.map(spec, tree)
+
+
+def shard_batch(tree, mesh: Mesh, *, axis: str = "replica"):
+    """``device_put`` a pytree of batch operands with
+    :func:`replica_pspecs` shardings — the serving engine calls this on
+    (clouds, n_valid, dplan) before its jitted step; jit then follows the
+    operand sharding and each replica computes its batch slice."""
+    specs = replica_pspecs(tree, mesh, axis=axis)
+    return jax.tree.map(
+        lambda leaf, s: jax.device_put(leaf, NamedSharding(mesh, s)),
+        tree, specs)

@@ -57,6 +57,32 @@ built-ins are ordinary registry entries:
 
 New variants plug in the same way (a ``@register_backend`` subclass)
 instead of growing new kwargs.
+
+The bucketing contract (serving tier, ``repro.launch.serve``)
+--------------------------------------------------------------
+
+``forward``/``batched_forward`` accept ``n_valid`` — the real row count of
+a cloud padded up to a shape bucket. The contract: for any cloud ``c`` of
+``n`` points padded to a larger bucket with FINITE pad rows appended after
+the real rows (the serving tier pads with zeros),
+
+    ``model.forward(pad(c), n_valid=n)`` is **bitwise-equal** to
+    ``model.forward(c)``
+
+for every backend and schedule, provided ``n >= K`` (the first layer's
+neighbor count) and the FPS start point (row 0) is real. Why it holds:
+only the FIRST SA layer ever sees layer-0 rows — masked FPS starts pads at
+``-inf`` min-distance (never the argmax; real rows keep exactly the
+unpadded distances) and masked kNN forces pad distances to ``+inf``
+(strictly worse than any finite real distance, so ``top_k`` values and
+index tie-breaks are unchanged) — so the selected indices, hence every
+gathered tensor downstream, are identical; later layers operate purely on
+FPS-selected real points. ``n_valid`` may be traced, so ONE jit trace per
+bucket shape serves every occupancy — this is what keeps the serving
+tier's ``jit_batched_forward`` caches warm. ``batched_forward`` also
+accepts a prebuilt (possibly cached) batched :class:`DevicePlan` per call
+via ``dplan=`` — the serving plan cache's handle for skipping
+``device_build_plan`` inside the trace.
 """
 from __future__ import annotations
 
@@ -439,26 +465,81 @@ class CompiledModel:
         construction at all (baseline, prebuilt plans)."""
         return self._device_planning
 
+    @property
+    def planned(self) -> bool:
+        """True when execution routes through a gather order (any schedule
+        but 'baseline') — i.e. when there is a :class:`DevicePlan` for the
+        serving tier's plan cache to build and reuse."""
+        return self._planned
+
+    def build_device_plan(self, cloud: jnp.ndarray,
+                          n_valid=None) -> DevicePlan:
+        """The single-cloud :class:`DevicePlan` this model's schedule would
+        use for ``cloud`` — the serving plan cache's build hook: cache the
+        result under the cloud's content key and pass it back through
+        ``forward(dplan=...)`` (or :meth:`DevicePlan.stack` a batch of
+        them into ``batched_forward(dplan=...)``) to skip plan
+        construction on every repeat. Runs Algorithm 1 in-trace
+        (jit-safe) under on-device planning, on host otherwise; returns
+        the compile-time plan unchanged when one is bound. ``n_valid``
+        masks shape-bucket pad rows out of the geometry, so the plan
+        equals the unpadded cloud's."""
+        if not self._planned:
+            raise ValueError("this model's schedule is unplanned "
+                             "('baseline'); there is no plan to build")
+        if self._dplan is not None:
+            return self._dplan
+        pts_list, ctr_list, nbr_list = self._geometry_pass(
+            jnp.asarray(cloud), n_valid)
+        if self._device_planning:
+            return self._traced_plan(pts_list, nbr_list)
+        return self._device_plan_for(pts_list, ctr_list, nbr_list)
+
     # -- execution ----------------------------------------------------------
 
-    def forward(self, cloud: jnp.ndarray) -> jnp.ndarray:
-        """Single cloud (N, 3) -> logits (n_classes,)."""
-        if self._planned:
-            return self._forward_planned(cloud)
-        return self._forward_base(cloud)
+    def forward(self, cloud: jnp.ndarray, *, n_valid=None,
+                dplan: DevicePlan | None = None) -> jnp.ndarray:
+        """Single cloud (N, 3) -> logits (n_classes,).
 
-    def batched_forward(self, clouds: jnp.ndarray) -> jnp.ndarray:
+        ``n_valid`` marks the real row count of a shape-bucket-padded cloud
+        (bitwise-equal to the unpadded forward — the bucketing contract in
+        the module docstring); ``dplan`` supplies a prebuilt single-cloud
+        :class:`DevicePlan` for this call (the serving plan cache), taking
+        precedence over in-trace construction and host planning."""
+        if self._planned:
+            return self._forward_planned(cloud, n_valid=n_valid, dplan=dplan)
+        if dplan is not None:
+            raise ValueError("dplan= was passed but this model's schedule "
+                             "is unplanned ('baseline'); there is no "
+                             "gather order for it to drive")
+        return self._forward_base(cloud, n_valid)
+
+    def batched_forward(self, clouds: jnp.ndarray, *, n_valid=None,
+                        dplan: DevicePlan | None = None) -> jnp.ndarray:
         """Batch (B, N, 3) -> logits (B, n_classes). Grid-batched backends
         get ONE kernel launch per MLP for the whole batch (geometry only is
         vmapped); others vmap the single-cloud forward. Under a schedule or
         policy the per-cloud plans are stacked into one batched
         :class:`DevicePlan` and every SA layer issues ONE batch-gridded
-        ``aggregate_diff_batched`` gather — not a per-cloud Python loop."""
+        ``aggregate_diff_batched`` gather — not a per-cloud Python loop.
+
+        ``n_valid`` is a (B,) vector of real row counts for shape-bucket-
+        padded clouds (per-row bitwise-equal to the unpadded forwards);
+        ``dplan`` supplies a prebuilt batched :class:`DevicePlan` for THIS
+        call — the serving tier stacks plan-cache hits into one and skips
+        ``device_build_plan`` entirely."""
         if self._planned:
-            return self._batched_forward_planned(clouds)
+            return self._batched_forward_planned(clouds, n_valid=n_valid,
+                                                 dplan=dplan)
+        if dplan is not None:
+            raise ValueError("dplan= was passed but this model's schedule "
+                             "is unplanned ('baseline'); there is no "
+                             "gather order for it to drive")
         if self.backend.batched_in_grid:
-            return self._batched_in_grid(clouds)
-        return jax.vmap(self._forward_base)(clouds)
+            return self._batched_in_grid(clouds, n_valid)
+        if n_valid is None:
+            return jax.vmap(self._forward_base)(clouds)
+        return jax.vmap(self._forward_base)(clouds, n_valid)
 
     def loss_fn(self, clouds, labels):
         """Mean NLL + accuracy over a batch (same contract as the old
@@ -584,21 +665,23 @@ class CompiledModel:
 
     # -- execution internals ------------------------------------------------
 
-    def _forward_base(self, cloud):
+    def _forward_base(self, cloud, n_valid=None):
         """Layer-by-layer index-order execution — identical structure (and
         bitwise-identical results per backend) to the pre-registry
-        ``pointnet2.forward``."""
+        ``pointnet2.forward``. ``n_valid`` masks layer-0 pad rows (the
+        bucketing contract); only the first SA layer ever sees them."""
         cfg = self.config
         feats = _pn.lift_features(cloud, cfg.layers[0].in_features)
         pts = cloud
         for i, spec in enumerate(cfg.layers):
-            pts, diff = _pn._sa_geometry(spec, pts, feats)
+            pts, diff = _pn._sa_geometry(spec, pts, feats,
+                                         n_valid if i == 0 else None)
             h = self.backend.apply_mlp(("sa", i), diff)
             feats = jnp.max(h, axis=1)                   # reduction over K
         g = jnp.max(feats, axis=0)                       # global max pool
         return self.backend.apply_mlp("head", g, final_relu=False)
 
-    def _batched_in_grid(self, clouds):
+    def _batched_in_grid(self, clouds, n_valid=None):
         """Batch-in-grid execution: vmap only the per-cloud geometry; every
         MLP is ONE batched kernel launch (never vmap over the kernel)."""
         cfg = self.config
@@ -606,19 +689,24 @@ class CompiledModel:
             lambda c: _pn.lift_features(c, cfg.layers[0].in_features))(clouds)
         pts = clouds
         for i, spec in enumerate(cfg.layers):
-            pts, diff = jax.vmap(
-                functools.partial(_pn._sa_geometry, spec))(pts, feats)
+            if i == 0 and n_valid is not None:
+                pts, diff = jax.vmap(
+                    functools.partial(_pn._sa_geometry, spec))(pts, feats,
+                                                               n_valid)
+            else:
+                pts, diff = jax.vmap(
+                    functools.partial(_pn._sa_geometry, spec))(pts, feats)
             h = self.backend.apply_mlp_batched(("sa", i), diff)
             feats = jnp.max(h, axis=2)                   # reduction over K
         g = jnp.max(feats, axis=1)                       # global max pool
         return self.backend.apply_mlp_batched("head", g, final_relu=False)
 
-    def _geometry_pass(self, cloud):
+    def _geometry_pass(self, cloud, n_valid=None):
         """Pass 1 of planned execution: the same FPS/kNN geometry as the
         base path, kept as explicit per-layer device tensors so the plan
         (built from exactly this geometry — on device or on host) permutes
         exactly the rows being gathered."""
-        return _pn.geometry_pass(self.config, cloud)
+        return _pn.geometry_pass(self.config, cloud, n_valid=n_valid)
 
     def _resolved_intra(self) -> str:
         """The concrete intra mode device planning lowers ('auto' resolves
@@ -640,22 +728,24 @@ class CompiledModel:
                                  intra=self._resolved_intra(),
                                  coordinated=self._spec["coordinated"])
 
-    def _forward_planned(self, cloud):
+    def _forward_planned(self, cloud, n_valid=None, dplan=None):
         """Plan-driven execution. Pass 2 runs each SA layer's centers in
         plan order, gathering neighbor differences through the
         scalar-prefetch ``aggregate_diff`` kernel — the plan-ordered index
         stream is what elides DMAs — then scatters the per-center max back
         to index order, which makes the logits bitwise independent of the
-        order. The schedule itself is a :class:`DevicePlan`: lowered once
-        at compile time when prebuilt, built INSIDE the trace from this
-        cloud's own geometry under on-device planning (then the whole
-        function jits with zero host transfers), or — host fallback —
-        lowered here from the host plan the spec/policy builds for this
-        cloud's geometry."""
+        order. The schedule itself is a :class:`DevicePlan`: passed in per
+        call (serving plan cache), lowered once at compile time when
+        prebuilt, built INSIDE the trace from this cloud's own geometry
+        under on-device planning (then the whole function jits with zero
+        host transfers), or — host fallback — lowered here from the host
+        plan the spec/policy builds for this cloud's geometry."""
         cfg = self.config
         feats = _pn.lift_features(cloud, cfg.layers[0].in_features)
-        pts_list, ctr_list, nbr_list = self._geometry_pass(cloud)
-        if self._dplan is not None:
+        pts_list, ctr_list, nbr_list = self._geometry_pass(cloud, n_valid)
+        if dplan is not None:
+            pass                              # caller-supplied (plan cache)
+        elif self._dplan is not None:
             dplan = self._dplan
         elif self._device_planning:
             dplan = self._traced_plan(pts_list, nbr_list)
@@ -686,10 +776,11 @@ class CompiledModel:
         g = jnp.max(feats, axis=0)
         return self.backend.apply_mlp("head", g, final_relu=False)
 
-    def _batched_forward_planned(self, clouds):
+    def _batched_forward_planned(self, clouds, n_valid=None, dplan=None):
         """Batched plan-driven execution — the per-cloud Python loop folded
-        into single batch-gridded launches. On-device planning (and any
-        prebuilt :class:`DevicePlan`) routes through the fully-traced
+        into single batch-gridded launches. A caller-supplied ``dplan``
+        (the serving plan cache), on-device planning, and any prebuilt
+        :class:`DevicePlan` route through the fully-traced
         :meth:`_batched_forward_device` path — vmapped geometry, vmapped
         plan construction, zero host sync. Only the host-planning fallback
         still walks the batch in Python: its per-cloud ``np.asarray``
@@ -699,11 +790,17 @@ class CompiledModel:
         the whole batch. Same arithmetic per row as the per-cloud path, so
         logits are bitwise equal to ``stack([forward(c) for c in clouds])``
         (tested per schedule)."""
-        if self._dplan is not None or self._device_planning:
-            return self._batched_forward_device(clouds)
+        if (dplan is not None or self._dplan is not None
+                or self._device_planning):
+            return self._batched_forward_device(clouds, n_valid, dplan)
         cfg = self.config
         batch = clouds.shape[0]
-        geoms = [self._geometry_pass(clouds[b]) for b in range(batch)]
+        if n_valid is None:
+            geoms = [self._geometry_pass(clouds[b]) for b in range(batch)]
+        else:
+            nv = np.asarray(n_valid)
+            geoms = [self._geometry_pass(clouds[b], int(nv[b]))
+                     for b in range(batch)]
         dplan = self._device_plan_for(*geoms[0], batch_geoms=geoms)
         tracing = isinstance(clouds, jax.core.Tracer)
         feats = jnp.stack([_pn.lift_features(clouds[b],
@@ -727,23 +824,30 @@ class CompiledModel:
             self._last_dma = self._dma_report(None, None, 72, streams=streams)
         return self._head_batched(feats)
 
-    def _batched_forward_device(self, clouds):
+    def _batched_forward_device(self, clouds, n_valid=None, dplan=None):
         """The fully-traced batched path: vmapped geometry, a vmapped
         :func:`~repro.core.schedule.device_build_plan` (unless a prebuilt
-        :class:`DevicePlan` is bound), then exactly one
-        ``aggregate_diff_batched`` gather and one batched MLP apply per SA
-        layer. No per-cloud Python loop and no ``np.asarray`` on geometry
-        — the whole thing is ONE jittable clouds→logits computation
-        (``jit_batched_forward`` wraps it). Same arithmetic per row as the
-        host-planned path, so logits stay bitwise equal to it."""
+        or caller-supplied :class:`DevicePlan` short-circuits it — the
+        serving plan cache passes one to skip construction entirely), then
+        exactly one ``aggregate_diff_batched`` gather and one batched MLP
+        apply per SA layer. No per-cloud Python loop and no ``np.asarray``
+        on geometry — the whole thing is ONE jittable clouds→logits
+        computation (``jit_batched_forward`` wraps it). Same arithmetic
+        per row as the host-planned path, so logits stay bitwise equal to
+        it."""
         cfg = self.config
         batch = clouds.shape[0]
         feats = jax.vmap(
             lambda c: _pn.lift_features(c, cfg.layers[0].in_features))(clouds)
-        pts_s, ctr_s, nbr_s = jax.vmap(
-            functools.partial(_pn.geometry_pass, cfg))(clouds)
-        if self._dplan is not None:
-            dplan = self._dplan
+        if n_valid is None:
+            pts_s, ctr_s, nbr_s = jax.vmap(
+                functools.partial(_pn.geometry_pass, cfg))(clouds)
+        else:
+            pts_s, ctr_s, nbr_s = jax.vmap(
+                lambda c, nv: _pn.geometry_pass(cfg, c, n_valid=nv))(
+                clouds, jnp.asarray(n_valid))
+        if dplan is not None or self._dplan is not None:
+            dplan = dplan if dplan is not None else self._dplan
             if dplan.batched and dplan.batch_size != batch:
                 raise ValueError(
                     f"batched DevicePlan is for batch {dplan.batch_size}, "

@@ -48,10 +48,20 @@ Params = Any
 # ---------------------------------------------------------------------------
 
 def farthest_point_sample(points: jnp.ndarray, n_samples: int,
-                          start: int = 0) -> jnp.ndarray:
+                          start: int = 0, *,
+                          n_valid=None) -> jnp.ndarray:
     """FPS over ``points`` (N, 3) -> (n_samples,) int32 indices.
     Deterministic (start point given); identical to
-    ``core.workload.farthest_point_sample_np``."""
+    ``core.workload.farthest_point_sample_np``.
+
+    ``n_valid`` masks trailing pad rows (the serving tier's shape-bucket
+    padding): rows ``>= n_valid`` start at ``-inf`` min-distance, so the
+    running ``argmax`` can never select them, while every real row keeps
+    exactly the distances the unpadded cloud would produce — the selected
+    indices are bitwise-identical to FPS on ``points[:n_valid]``
+    (``argmax`` picks the first maximum on both sides, and the pads are
+    strictly smaller than any real squared distance). ``n_valid`` may be a
+    traced scalar, so one jit trace serves every occupancy of a bucket."""
     n = points.shape[0]
 
     def body(i, state):
@@ -63,15 +73,28 @@ def farthest_point_sample(points: jnp.ndarray, n_samples: int,
 
     idx0 = jnp.zeros(n_samples, dtype=jnp.int32)
     dist0 = jnp.full((n,), jnp.inf, dtype=points.dtype)
+    if n_valid is not None:
+        dist0 = jnp.where(jnp.arange(n) < n_valid, dist0, -jnp.inf)
     idx, _, _ = jax.lax.fori_loop(0, n_samples, body,
                                   (idx0, dist0, jnp.int32(start)))
     return idx
 
 
-def knn(queries: jnp.ndarray, points: jnp.ndarray, k: int) -> jnp.ndarray:
+def knn(queries: jnp.ndarray, points: jnp.ndarray, k: int, *,
+        n_valid=None) -> jnp.ndarray:
     """(Q, k) indices of k nearest ``points`` per query (self included when
-    the query is a member of ``points``)."""
+    the query is a member of ``points``).
+
+    ``n_valid`` masks trailing pad rows (serving shape buckets): their
+    distance is forced to ``+inf``, so as long as ``k <= n_valid`` the
+    ``top_k`` selection — values AND index tie-breaks — is bitwise the
+    selection over ``points[:n_valid]`` alone (the pads are strictly worse
+    than any finite real distance and all real comparisons are
+    unchanged)."""
     d = jnp.sum((queries[:, None, :] - points[None, :, :]) ** 2, axis=-1)
+    if n_valid is not None:
+        d = jnp.where(jnp.arange(points.shape[0])[None, :] < n_valid,
+                      d, jnp.inf)
     _, idx = jax.lax.top_k(-d, k)
     return idx
 
@@ -135,7 +158,8 @@ def lift_features(points: jnp.ndarray, n_features: int) -> jnp.ndarray:
     return f[:, :n_features]
 
 
-def geometry_pass(config: PointNetConfig, cloud: jnp.ndarray):
+def geometry_pass(config: PointNetConfig, cloud: jnp.ndarray, *,
+                  n_valid=None):
     """The full FPS/kNN geometry of every SA layer on one cloud, as
     device tensors that never leave the trace: per layer k = 1..L the
     FPS-selected coordinates ``pts[k]`` (n_k, 3), center indices
@@ -149,13 +173,20 @@ def geometry_pass(config: PointNetConfig, cloud: jnp.ndarray):
     whole cloud→logits function jits), or on host after an explicit
     ``np.asarray`` pull when device planning is off. vmap it for a batch;
     every output is an ordinary jnp array (int32 indices), so nothing
-    here forces a host sync."""
+    here forces a host sync.
+
+    ``n_valid`` marks the real row count of a shape-bucket-padded cloud
+    (serving tier): it masks the FIRST layer's FPS/kNN only — every later
+    layer operates on FPS-selected real points, so the rest of the pass is
+    untouched and the whole geometry is bitwise-equal to the unpadded
+    cloud's (the bucketing contract in ``repro.models.backend``)."""
     pts_list, ctr_list, nbr_list = [cloud], [None], [None]
     pts = cloud
-    for spec in config.layers:
-        centers = farthest_point_sample(pts, spec.n_centers)
+    for li, spec in enumerate(config.layers):
+        nv = n_valid if li == 0 else None
+        centers = farthest_point_sample(pts, spec.n_centers, n_valid=nv)
         c_pts = pts[centers]
-        nbr = knn(c_pts, pts, spec.n_neighbors)
+        nbr = knn(c_pts, pts, spec.n_neighbors, n_valid=nv)
         pts_list.append(c_pts)
         ctr_list.append(centers)
         nbr_list.append(nbr)
@@ -163,13 +194,14 @@ def geometry_pass(config: PointNetConfig, cloud: jnp.ndarray):
     return pts_list, ctr_list, nbr_list
 
 
-def _sa_geometry(spec: SALayerSpec, points, features):
+def _sa_geometry(spec: SALayerSpec, points, features, n_valid=None):
     """The point-mapping + aggregation half of one SA layer on a single
     cloud: FPS centers, k-NN gather, neighbor-minus-center differences.
-    points (N, 3), features (N, C_in) -> (M, 3), (M, K, C_in)."""
-    centers = farthest_point_sample(points, spec.n_centers)
+    points (N, 3), features (N, C_in) -> (M, 3), (M, K, C_in). ``n_valid``
+    masks trailing pad rows (layer-0 shape buckets) out of FPS and kNN."""
+    centers = farthest_point_sample(points, spec.n_centers, n_valid=n_valid)
     c_pts = points[centers]
-    nbr = knn(c_pts, points, spec.n_neighbors)          # (M, K)
+    nbr = knn(c_pts, points, spec.n_neighbors, n_valid=n_valid)  # (M, K)
     f_nbr = features[nbr]                               # (M, K, C)
     f_ctr = features[centers][:, None, :]
     return c_pts, f_nbr - f_ctr                         # aggregation D(.)

@@ -1,0 +1,326 @@
+"""Serving tier: shape buckets, the bucketing contract (padded == unpadded,
+bitwise), continuous batching, trace-count warmth, the LM one-trace
+regression, and stream replay stats."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.workload import PointNetConfig, SALayerSpec
+from repro.launch import serve as serve_mod
+from repro.launch.serve import (LMServable, PointCloudServable, Request,
+                                ServingEngine, ShapeBuckets, generate)
+from repro.models import lm
+from repro.models import pointnet2 as pn
+from repro.models.backend import compile_model
+
+
+def tiny_config(n=64, c1=24, c2=8, k=4):
+    return PointNetConfig(name="tiny-serve", n_points=n, layers=(
+        SALayerSpec(n_centers=c1, n_neighbors=k, in_features=4,
+                    mlp=(4, 8, 8, 16)),
+        SALayerSpec(n_centers=c2, n_neighbors=k, in_features=16,
+                    mlp=(16, 16, 16, 32)),
+    ))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_config()
+    params = pn.init_params(jax.random.PRNGKey(0), cfg, n_classes=10)
+    return cfg, params
+
+
+def _cloud(n, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, 3)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# shape buckets
+# ---------------------------------------------------------------------------
+
+def test_buckets_pick_smallest_fit():
+    b = ShapeBuckets(points=(48, 64), batch=(1, 2, 4))
+    assert b.point_bucket(40) == 48
+    assert b.point_bucket(48) == 48
+    assert b.point_bucket(49) == 64
+    assert b.batch_bucket(3) == 4
+    assert b.max_batch == 4
+
+
+def test_buckets_refuse_overflow_and_bad_order():
+    b = ShapeBuckets(points=(48, 64), batch=(2,))
+    with pytest.raises(ValueError, match="exceeds"):
+        b.point_bucket(65)
+    with pytest.raises(ValueError, match="exceeds"):
+        b.batch_bucket(3)
+    with pytest.raises(ValueError, match="ascending"):
+        ShapeBuckets(points=(64, 48))
+    with pytest.raises(ValueError, match="ascending"):
+        ShapeBuckets(points=(64,), batch=())
+
+
+# ---------------------------------------------------------------------------
+# the bucketing contract: padded rows are bitwise-inert
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["float", "reram-fused"])
+@pytest.mark.parametrize("schedule", ["baseline", "pointer"])
+def test_padded_forward_bitwise_equal(setup, backend, schedule):
+    cfg, params = setup
+    model = compile_model(params, cfg, backend=backend, schedule=schedule)
+    cloud = _cloud(48, seed=3)
+    padded = np.zeros((64, 3), np.float32)
+    padded[:48] = cloud
+    ref = model.forward(jnp.asarray(cloud))
+    got = model.forward(jnp.asarray(padded), n_valid=48)
+    assert bool(jnp.all(got == ref))
+
+
+def test_padded_batched_forward_bitwise_equal(setup):
+    cfg, params = setup
+    model = compile_model(params, cfg, backend="reram-fused",
+                          schedule="pointer")
+    sizes = (40, 48, 56, 64)
+    clouds = [_cloud(n, seed=n) for n in sizes]
+    padded = np.zeros((4, 64, 3), np.float32)
+    for i, c in enumerate(clouds):
+        padded[i, :c.shape[0]] = c
+    got = model.batched_forward(jnp.asarray(padded),
+                                n_valid=np.asarray(sizes, np.int32))
+    for i, c in enumerate(clouds):
+        assert bool(jnp.all(got[i] == model.forward(jnp.asarray(c)))), i
+
+
+# ---------------------------------------------------------------------------
+# engine: bitwise serving, trace warmth, batching semantics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend,schedule", [
+    ("float", "baseline"),
+    ("float", "pointer"),
+    ("reram-fused", "pointer"),
+])
+def test_engine_serves_bitwise_equal(setup, backend, schedule):
+    cfg, params = setup
+    model = compile_model(params, cfg, backend=backend, schedule=schedule)
+    engine = ServingEngine(PointCloudServable(
+        model, buckets=ShapeBuckets(points=(48, 64), batch=(1, 2, 4))))
+    clouds = [_cloud(n, seed=i) for i, n in enumerate((40, 48, 56, 64, 44))]
+    reqs = [engine.submit(c) for c in clouds]
+    engine.drain()
+    for req, cloud in zip(reqs, clouds):
+        ref = model.forward(jnp.asarray(cloud))
+        assert bool(jnp.all(jnp.asarray(req.result) == ref)), req.id
+
+
+def test_warm_repeat_adds_no_trace(setup):
+    cfg, params = setup
+    model = compile_model(params, cfg, schedule="pointer")
+    servable = PointCloudServable(
+        model, buckets=ShapeBuckets(points=(64,), batch=(1, 2)))
+    engine = ServingEngine(servable)
+    c = _cloud(64, seed=9)
+    engine.submit(c); engine.submit(c)
+    engine.drain()
+    warm = servable.jit_traces
+    assert warm >= 1
+    engine.submit(c); engine.submit(c)
+    engine.drain()
+    assert servable.jit_traces == warm          # same bucket shape -> warm
+    assert servable.batches == 2
+
+
+def test_step_skims_one_bucket_fifo(setup):
+    cfg, params = setup
+    model = compile_model(params, cfg, schedule="baseline")
+    servable = PointCloudServable(
+        model, buckets=ShapeBuckets(points=(48, 64), batch=(1, 2, 4)))
+    engine = ServingEngine(servable)
+    small = [engine.submit(_cloud(40, seed=i)) for i in range(2)]
+    big = engine.submit(_cloud(60, seed=7))
+    small.append(engine.submit(_cloud(44, seed=8)))
+    first = engine.step()
+    # head fixes the 48-bucket; the 64-bucket request keeps its queue slot
+    assert [r.id for r in first] == [r.id for r in small]
+    second = engine.step()
+    assert [r.id for r in second] == [big.id]
+    assert engine.step() == []
+
+
+def test_max_batch_bounds_batch_assembly(setup):
+    cfg, params = setup
+    model = compile_model(params, cfg, schedule="baseline")
+    servable = PointCloudServable(
+        model, buckets=ShapeBuckets(points=(64,), batch=(1, 2)))
+    engine = ServingEngine(servable)
+    for i in range(5):
+        engine.submit(_cloud(64, seed=i))
+    assert len(engine.step()) == 2
+    assert len(engine.queue) == 3
+    engine.drain()
+    assert servable.requests == 5 and servable.batches == 3
+
+
+def test_request_latency_and_stats(setup):
+    cfg, params = setup
+    model = compile_model(params, cfg, schedule="baseline")
+    engine = ServingEngine(PointCloudServable(
+        model, buckets=ShapeBuckets(points=(64,), batch=(1, 2))))
+    req = engine.submit(_cloud(64), t=1.0)
+    assert isinstance(req, Request) and req.latency is None
+    engine.step(now=3.5)
+    assert req.latency == pytest.approx(2.5)
+    s = engine.stats()
+    assert s["completed"] == 1 and s["queued"] == 0
+    assert s["requests"] == 1 and s["batches"] == 1
+
+
+def test_serve_stream_reports_latency_stats(setup):
+    cfg, params = setup
+    model = compile_model(params, cfg, schedule="pointer")
+    engine = ServingEngine(PointCloudServable(
+        model, buckets=ShapeBuckets(points=(64,), batch=(1, 2))))
+    c = _cloud(64, seed=2)
+    stream = [(0.000, c), (0.001, c * 0.5), (0.002, c)]
+    stats = engine.serve_stream(stream)
+    assert stats["n_requests"] == 3
+    assert stats["wall_s"] > 0 and stats["throughput_rps"] > 0
+    assert 0 <= stats["p50_ms"] <= stats["p99_ms"]
+    assert stats["plan_cache"]["hits"] >= 1    # repeated cloud
+
+
+def test_oversized_cloud_is_refused(setup):
+    cfg, params = setup
+    model = compile_model(params, cfg, schedule="baseline")
+    engine = ServingEngine(PointCloudServable(
+        model, buckets=ShapeBuckets(points=(48,), batch=(1,))))
+    engine.submit(_cloud(64))
+    with pytest.raises(ValueError, match="exceeds"):
+        engine.step()
+
+
+# ---------------------------------------------------------------------------
+# LM path: the one-trace regression + generate round-trip
+# ---------------------------------------------------------------------------
+
+def _lm_setup(vocab=64):
+    # a uniquely-named reduced config so the module-level jit caches start
+    # cold for this test no matter what ran before it
+    cfg = dataclasses.replace(get_config("qwen1.5-0.5b").reduced(),
+                              name="serve-one-trace-test")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    prompts = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 8)),
+        jnp.int32)
+    return cfg, params, prompts
+
+
+def test_generate_traces_prefill_once(monkeypatch):
+    cfg, params, prompts = _lm_setup()
+    traces = []
+    real_prefill = lm.prefill
+
+    def counting_prefill(*a, **kw):
+        traces.append(1)            # runs at TRACE time only under jit
+        return real_prefill(*a, **kw)
+
+    monkeypatch.setattr(lm, "prefill", counting_prefill)
+    out1, _ = generate(params, cfg, prompts, max_new_tokens=3)
+    out2, _ = generate(params, cfg, prompts, max_new_tokens=3)
+    assert len(traces) == 1, "prefill re-traced across generate calls"
+    assert out1.shape == (2, 11)
+    assert bool(jnp.all(out1 == out2))          # greedy + same prompts
+
+
+def test_generate_through_engine_matches_decode(monkeypatch):
+    cfg, params, prompts = _lm_setup()
+    out, stats = generate(params, cfg, prompts, max_new_tokens=4)
+    assert out.shape == (2, prompts.shape[1] + 4)
+    assert bool(jnp.all(out[:, :prompts.shape[1]] == prompts))
+    assert {"prefill_s", "decode_s", "decode_tok_per_s"} <= set(stats)
+    # same path, request-at-a-time through the engine
+    servable = LMServable(params, cfg, max_new_tokens=4, max_batch=2)
+    engine = ServingEngine(servable)
+    reqs = [engine.submit(prompts[i]) for i in range(2)]
+    engine.drain()
+    assert bool(jnp.all(jnp.stack([r.result for r in reqs]) == out))
+
+
+def test_lm_bucket_is_prompt_length(setup):
+    cfg = dataclasses.replace(get_config("qwen1.5-0.5b").reduced(),
+                              name="serve-bucket-test")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    servable = LMServable(params, cfg, max_new_tokens=2, max_batch=4)
+    engine = ServingEngine(servable)
+    a = engine.submit(jnp.zeros((8,), jnp.int32))
+    b = engine.submit(jnp.zeros((6,), jnp.int32))
+    c = engine.submit(jnp.ones((8,), jnp.int32))
+    first = engine.step()
+    assert [r.id for r in first] == [a.id, c.id]   # same length batch
+    assert [r.id for r in engine.step()] == [b.id]
+
+
+# ---------------------------------------------------------------------------
+# replica fan-out (forced host devices -> subprocess)
+# ---------------------------------------------------------------------------
+
+def test_replica_mesh_serving_bitwise(tmp_path):
+    import os
+    import subprocess
+    import sys
+    script = """
+import sys; sys.path.insert(0, 'src')
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.workload import PointNetConfig, SALayerSpec
+from repro.launch.mesh import make_replica_mesh
+from repro.launch.serve import PointCloudServable, ServingEngine, ShapeBuckets
+from repro.launch.sharding import replica_pspecs, shard_batch
+from repro.models import pointnet2 as pn
+from repro.models.backend import compile_model
+
+assert len(jax.devices()) == 8
+mesh = make_replica_mesh(4)
+assert mesh.shape == {"replica": 4}
+
+# divisible leading dim -> sharded; ragged -> replicated
+specs = replica_pspecs((jnp.zeros((8, 3)), jnp.zeros((5, 3)), None), mesh)
+assert specs[0] == jax.sharding.PartitionSpec("replica", None)
+assert specs[1] == jax.sharding.PartitionSpec()
+sharded = shard_batch(jnp.zeros((8, 3)), mesh)
+assert len(sharded.sharding.device_set) == 4
+
+cfg = PointNetConfig(name="tiny", n_points=64, layers=(
+    SALayerSpec(n_centers=24, n_neighbors=4, in_features=4,
+                mlp=(4, 8, 8, 16)),
+    SALayerSpec(n_centers=8, n_neighbors=4, in_features=16,
+                mlp=(16, 16, 16, 32))))
+params = pn.init_params(jax.random.PRNGKey(0), cfg, n_classes=10)
+model = compile_model(params, cfg, schedule="pointer")
+# batch 8 over 4 replicas: 2 clouds per replica (a lone cloud per replica
+# is the singleton-batch case and drifts — see PointCloudServable)
+buckets = ShapeBuckets(points=(64,), batch=(8,))
+rng = np.random.default_rng(0)
+clouds = [rng.normal(size=(64, 3)).astype(np.float32) for _ in range(8)]
+
+plain = ServingEngine(PointCloudServable(model, buckets=buckets))
+fanout = ServingEngine(PointCloudServable(model, buckets=buckets,
+                                          mesh=mesh))
+r0 = [plain.submit(c) for c in clouds]; plain.drain()
+r1 = [fanout.submit(c) for c in clouds]; fanout.drain()
+for a, b in zip(r0, r1):
+    assert bool(jnp.all(jnp.asarray(a.result) == jnp.asarray(b.result)))
+print("OK")
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu")
+    r = subprocess.run([sys.executable, "-c", script],
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))),
+                       capture_output=True, text=True, env=env, timeout=420)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
+    assert "OK" in r.stdout

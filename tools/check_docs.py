@@ -3,8 +3,9 @@
 1. Extracts every ```python fenced block from README.md and executes them
    in order in one shared namespace (the quickstart snippet is a real
    program, not decoration).
-2. Runs the doctest suite of the public API surface
-   (``src/repro/__init__.py``) via pytest.
+2. Runs the doctest suites of the public API surface
+   (``src/repro/__init__.py``) and the serving tier
+   (``src/repro/launch/__init__.py``) via pytest.
 
 Run:  PYTHONPATH=src JAX_PLATFORMS=cpu python tools/check_docs.py
 CI runs this in the ``docs`` job on every push.
@@ -36,11 +37,13 @@ def run_readme_snippets(path: pathlib.Path) -> int:
 
 
 def run_doctests() -> int:
-    target = ROOT / "src" / "repro" / "__init__.py"
-    print(f"-- running doctests: {target.relative_to(ROOT)}")
+    targets = [ROOT / "src" / "repro" / "__init__.py",
+               ROOT / "src" / "repro" / "launch" / "__init__.py"]
+    for t in targets:
+        print(f"-- running doctests: {t.relative_to(ROOT)}")
     return subprocess.call(
         [sys.executable, "-m", "pytest", "--doctest-modules", "-q",
-         str(target)], cwd=ROOT)
+         *map(str, targets)], cwd=ROOT)
 
 
 def main() -> int:
