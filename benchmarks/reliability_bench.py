@@ -1,0 +1,63 @@
+"""Reliability benchmark: the fault-rate x protection Pareto sweep.
+
+Runs :func:`repro.reliability.sweep` on the tiny two-SA-layer model over
+a stuck-cell fault grid chosen to straddle the accuracy cliff (raw
+crossbars hold up to ~8 % total stuck rate, then fall off; group-4
+Hamming holds the line through 12 %), and reports the grid as one
+``reliability/pareto`` row: per-arm accuracy curves, the Pareto-front
+size, the ECC energy/area surcharge, and the archetype census.
+
+Everything is seeded — the row is run-to-run stable, which is what lets
+``tools/check_bench.py --require reliability/pareto`` gate its presence
+in CI. Wall-µs is sweep time (compiles + interpret-mode forwards); the
+derived fields are the signal.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core.workload import PointNetConfig, SALayerSpec
+from repro.models import pointnet2 as pn
+from repro.reliability import classify_archetypes, pareto_front, sweep
+
+from .common import row
+
+#: total stuck-cell probabilities: ideal / raw-still-fine / raw-degrading
+_RATES = (0.0, 0.10, 0.12)
+
+
+def _tiny():
+    cfg = PointNetConfig(name="rel-tiny", n_points=64, layers=(
+        SALayerSpec(n_centers=24, n_neighbors=4, in_features=4,
+                    mlp=(4, 8, 8, 16)),
+        SALayerSpec(n_centers=8, n_neighbors=4, in_features=16,
+                    mlp=(16, 16, 16, 32)),
+    ))
+    return cfg, pn.init_params(jax.random.PRNGKey(0), cfg, n_classes=10)
+
+
+def reliability(n_clouds: int = 8):
+    cfg, params = _tiny()
+    t0 = time.monotonic()
+    points = sweep(params, cfg, fault_rates=_RATES, n_clouds=n_clouds,
+                   seed=0, n_classes=10, ecc_group=4)
+    us = (time.monotonic() - t0) * 1e6
+    front = pareto_front(points)
+    counts = classify_archetypes(points)["counts"]
+    by_arm = {prot: [p for p in points if p.protection == prot]
+              for prot in ("none", "ecc")}
+    curves = ";".join(
+        f"acc_{prot}=" + "/".join(f"{p.accuracy:.3f}" for p in pts)
+        for prot, pts in by_arm.items())
+    ecc_pt = by_arm["ecc"][0]
+    base_pt = by_arm["none"][0]
+    surcharge = ecc_pt.energy_j - base_pt.energy_j
+    extra = ecc_pt.area_arrays - base_pt.area_arrays
+    census = "/".join(f"{k}:{v}" for k, v in sorted(counts.items()))
+    return [row(
+        f"reliability/pareto/{n_clouds}clouds", us,
+        f"rates={'/'.join(str(r) for r in _RATES)};{curves};"
+        f"front={len(front)};ecc_energy_j={surcharge:.3e};"
+        f"ecc_extra_arrays={extra};archetypes={census}")]

@@ -63,6 +63,7 @@ def main(argv=None) -> None:
     from .kernels_bench import kernels
     from .beyond_schedule import beyond
     from .serve_bench import serve
+    from .reliability_bench import reliability
 
     wls = workloads(seeds=(0,) if args.quick else (0, 1, 2))
     benches = [
@@ -74,6 +75,7 @@ def main(argv=None) -> None:
         ("kernel", kernels),
         ("beyond", lambda: beyond(wls)),
         ("serve", lambda: serve(16 if args.quick else 32)),
+        ("reliability", lambda: reliability(4 if args.quick else 8)),
     ]
     meta = _metadata(args)
     records = []

@@ -140,6 +140,32 @@ True
 >>> eng.stats()["plan_cache"]["hits"]               # repeat cloud hit
 1
 
+**Reliability** — ReRAM non-idealities and the defense
+(``repro.reliability``, DESIGN.md §13): :class:`FaultModel` injects
+seeded conductance noise / stuck cells / ADC clipping as a pure
+transform on the programmed planes (a zero-fault model is
+bitwise-identical to none at all), Hamming ECC in the arrays' spare
+columns repairs single stuck cells per codeword, and the Pareto
+harness scores fault-rate × protection grids on accuracy/energy/area:
+
+>>> fm = repro.FaultModel(p_stuck0=0.02, p_stuck1=0.02, seed=3)
+>>> noisy = repro.compile_model(params, cfg, backend="reram-fused",
+...                             ecc=True, fault_model=fm)
+>>> bool(jnp.all(repro.compile_model(
+...     params, cfg, backend="reram-fused",
+...     fault_model=repro.FaultModel(seed=9)).forward(cloud)
+...     == model.forward(cloud)))         # zero-fault == ideal, bitwise
+True
+>>> noisy.stats()["reliability"]["ecc"]["parity_cells"] > 0
+True
+>>> grid = [repro.reliability.DesignPoint(0.1, "none", accuracy=0.6,
+...                                       energy_j=1.0, area_arrays=6),
+...         repro.reliability.DesignPoint(0.1, "ecc", accuracy=1.0,
+...                                       energy_j=1.3, area_arrays=9)]
+>>> repro.PlanPolicy(reliability_target=0.9) \\
+...     .select_protection(grid).protection
+'ecc'
+
 Everything else stays importable from its submodule (``repro.core``,
 ``repro.kernels``, ``repro.models``, ...); see README.md for the
 backend table and the paper-section → module map.
@@ -155,8 +181,10 @@ from repro.launch.serve import (LMServable, PointCloudServable, Request,
                                 Servable, ServingEngine, ShapeBuckets)
 from repro.models.backend import (Backend, CompiledModel, available_backends,
                                   compile_model, register_backend)
+from repro import reliability
+from repro.reliability import FaultModel
 
-__version__ = "0.7.0"
+__version__ = "0.8.0"
 
 __all__ = [
     "Backend",
@@ -164,6 +192,7 @@ __all__ = [
     "CrossbarProgram",
     "DevicePlan",
     "ExecutionPlan",
+    "FaultModel",
     "LMServable",
     "MODE_PRESETS",
     "PAPER_MODELS",
@@ -182,5 +211,6 @@ __all__ = [
     "cloud_content_key",
     "compile_model",
     "register_backend",
+    "reliability",
     "__version__",
 ]

@@ -54,6 +54,12 @@ class HWParams:
     e_mac: float = 0.4e-12                   # per int MAC, digital @40nm
     e_array_op: float = 0.1e-9               # per 128x128 analog MVM
     e_dig_per_byte: float = 0.1e-12          # digital unit (diff/max/ReLU)
+    # ECC scrub (DESIGN.md §13): digital Hamming syndrome decode at the
+    # shift-add periphery. Charged per protected cell touched by one full
+    # scrub pass; throughput bounds the scrub's cycle cost. XOR-tree
+    # scale (a few gates per cell at 40 nm) — far below e_mac.
+    e_ecc_per_cell: float = 0.05e-12
+    ecc_cells_per_cycle: int = 1024
     # static/peripheral power (J/s), charged for the busy duration.
     # ReRAM tile: ~24 mW per IMA idle/peripheral (ISAAC's IMA is 289 mW
     # active; 8 % static is conservative) -> ~2.3 W for 96 IMAs.

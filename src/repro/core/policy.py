@@ -59,6 +59,10 @@ class PlanPolicy:
     intra_candidates / coordinated : the ordering design space
                     ``select_intra`` searches and the inter-layer
                     coordination it pairs the winner with.
+    reliability_target : optional accuracy floor (agreement rate vs the
+                    ideal program, in [0, 1]) for the protection
+                    decision — ``select_protection`` picks the cheapest
+                    swept design point meeting it (DESIGN.md §13).
     """
 
     hw: RooflineParams = DEFAULT_ROOFLINE
@@ -66,6 +70,7 @@ class PlanPolicy:
     window: int = 72
     intra_candidates: tuple[str, ...] = ("index", "greedy", "morton")
     coordinated: bool = True
+    reliability_target: float | None = None
 
     def __post_init__(self):
         if self.vmem_budget <= 0:
@@ -188,6 +193,34 @@ class PlanPolicy:
         """The ordering decision end to end: pick the intra mode by
         predicted elisions and return the winning (coordinated) plan."""
         return self._select_plan(workload)
+
+    # -- protection-level decision (DESIGN.md §13) ---------------------------
+
+    def select_protection(self, points):
+        """The cheapest protection level meeting ``reliability_target``:
+        among swept design points (:class:`repro.reliability.DesignPoint`
+        or any object with ``accuracy``/``energy_j``) whose accuracy meets
+        the target, return the one with the lowest energy (area breaks
+        ties). With no target set every point qualifies — the decision
+        degenerates to plain min-energy. Raises ``ValueError`` when no
+        point meets the bound, so an unmeetable target fails loudly
+        instead of silently under-protecting."""
+        points = list(points)
+        if not points:
+            raise ValueError("select_protection needs at least one "
+                             "candidate design point")
+        target = self.reliability_target
+        ok = [p for p in points
+              if target is None or p.accuracy >= target]
+        if not ok:
+            best = max(p.accuracy for p in points)
+            raise ValueError(
+                f"no design point meets reliability_target="
+                f"{target} (best accuracy among {len(points)} "
+                f"candidates: {best:.4f}); sweep stronger protection "
+                f"levels or lower the target")
+        return min(ok, key=lambda p: (p.energy_j,
+                                      getattr(p, "area_arrays", 0)))
 
 
 DEFAULT_POLICY = PlanPolicy()

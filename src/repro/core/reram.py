@@ -34,7 +34,14 @@ __all__ = [
 
 def quantize_weights(w: np.ndarray, bits: int = 8):
     """Symmetric per-tensor quantization. Returns (w_int, scale) with
-    ``w ~ w_int * scale`` and w_int in [-2^(b-1)+1, 2^(b-1)-1]."""
+    ``w ~ w_int * scale`` and w_int in [-2^(b-1)+1, 2^(b-1)-1].
+
+    Rejects NaN/Inf inputs: a single non-finite entry poisons the
+    ``max(|w|)`` scale (NaN scale quantizes everything to garbage)."""
+    w = np.asarray(w)
+    if not np.all(np.isfinite(w)):
+        raise ValueError("quantize_weights: input contains NaN/Inf — a "
+                         "non-finite value poisons the quantization scale")
     qmax = 2 ** (bits - 1) - 1
     scale = float(np.max(np.abs(w))) / qmax if np.any(w) else 1.0
     scale = scale or 1.0

@@ -43,17 +43,28 @@ def _pad_to(x, axis, mult):
     return jnp.pad(x, widths)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "fault_model"))
 def reram_linear(x: jnp.ndarray, w: jnp.ndarray,
                  b: jnp.ndarray | None = None, *,
-                 interpret: bool = True) -> jnp.ndarray:
-    """Float (…, K) @ (K, N) through the bit-sliced crossbar kernel."""
+                 interpret: bool = True, fault_model=None,
+                 fault_key: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Float (…, K) @ (K, N) through the bit-sliced crossbar kernel.
+
+    ``fault_model`` (a hashable :class:`repro.reliability.FaultModel`,
+    duck-typed so kernels stay below reliability in the layering) injects
+    ReRAM non-idealities into the freshly encoded cell planes before the
+    MVM — the per-layer twin of faulting a ``CrossbarProgram``. It rides
+    through jit as a static argument; ``fault_key`` seeds the injection
+    site (defaults to the model's base key)."""
     lead = x.shape[:-1]
     k, n = w.shape
     x2 = x.reshape(-1, k)
     x_int, sx = quantize_tensor(x2)
     w_int, sw = quantize_tensor(w)
     planes = encode_planes(w_int)
+    if fault_model is not None and not fault_model.is_ideal_for(2):
+        key = fault_model.base_key() if fault_key is None else fault_key
+        planes = fault_model.transform_planes(planes, key, cell_bits=2)
     # pad to the 128x128 crossbar geometry
     m0 = x2.shape[0]
     x_p = _pad_to(_pad_to(x_int.astype(jnp.int8), 0, 128), 1, 128)

@@ -52,7 +52,18 @@ FUSED_MODES = ("whole", "tiled", "mtiled", "wstat")
 
 
 def quantize_tensor(x: jnp.ndarray, bits: int = 8):
-    """Symmetric per-tensor quantization -> (int32 values, float scale)."""
+    """Symmetric per-tensor quantization -> (int32 values, float scale).
+
+    NaN/Inf inputs are rejected eagerly: a single NaN poisons the
+    ``max(|x|)`` scale and silently zeroes the whole tensor. The check
+    only runs on concrete arrays — under a jit trace values are abstract
+    and the caller keeps responsibility (program weights, the case that
+    matters, are always concrete at build time)."""
+    x = jnp.asarray(x)
+    if not isinstance(x, jax.core.Tracer) and not bool(
+            jnp.all(jnp.isfinite(x))):
+        raise ValueError("quantize_tensor: input contains NaN/Inf — a "
+                         "non-finite value poisons the quantization scale")
     qmax = float(2 ** (bits - 1) - 1)
     scale = jnp.maximum(jnp.max(jnp.abs(x)) / qmax, 1e-12)
     return jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32), scale
@@ -89,6 +100,9 @@ class CrossbarProgram:
     w_scale : (L, 1) float32 per-layer weight quantization scale
     col_mask: (L, d_pad) float32, 1.0 on each layer's real output columns
     widths  : static (d0, ..., dL) — the original float MLP widths
+    ecc     : optional static :class:`repro.reliability.ecc.EccSpec` when
+              the planes carry Hamming parity in their spare columns
+              (``build_program(..., ecc=...)``); None for bare programs
     """
 
     planes: jnp.ndarray
@@ -98,11 +112,12 @@ class CrossbarProgram:
     widths: tuple[int, ...]
     weight_bits: int = 8
     cell_bits: int = 2
+    ecc: object | None = None
 
     # -- pytree protocol (widths & bit layout are static aux data) ----------
     def tree_flatten(self):
         return ((self.planes, self.bias, self.w_scale, self.col_mask),
-                (self.widths, self.weight_bits, self.cell_bits))
+                (self.widths, self.weight_bits, self.cell_bits, self.ecc))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -140,12 +155,16 @@ class CrossbarProgram:
 
 
 def build_program(layers: Sequence, *, weight_bits: int = 8,
-                  cell_bits: int = 2) -> CrossbarProgram:
+                  cell_bits: int = 2, ecc=None) -> CrossbarProgram:
     """Program an MLP into crossbars: quantize + plane-encode every layer
     exactly once, pad to the 128x128 geometry, stack into one pytree.
 
     ``layers``: sequence of ``{"w": (k, n), "b": (n,)}`` dicts (the
     ``pointnet2`` parameter layout) or ``(w, b)`` tuples.
+
+    ``ecc``: optional :class:`repro.reliability.ecc.EccConfig` (or True
+    for the default) — Hamming-encode the planes' spare columns at
+    program time (DESIGN.md §13); MVM results are unchanged.
     """
     wbs = []
     for lyr in layers:
@@ -172,7 +191,7 @@ def build_program(layers: Sequence, *, weight_bits: int = 8,
         bias.append(jnp.pad(b.astype(jnp.float32), (0, d - b.shape[0])))
         scale.append(sw)
         mask.append((jnp.arange(d) < w.shape[1]).astype(jnp.float32))
-    return CrossbarProgram(
+    program = CrossbarProgram(
         planes=jnp.stack(planes),
         bias=jnp.stack(bias),
         w_scale=jnp.stack(scale).reshape(-1, 1).astype(jnp.float32),
@@ -181,6 +200,11 @@ def build_program(layers: Sequence, *, weight_bits: int = 8,
         weight_bits=weight_bits,
         cell_bits=cell_bits,
     )
+    if ecc is not None and ecc is not False:
+        # Deferred import: reliability sits above kernels in the layering.
+        from repro.reliability.ecc import protect_program
+        program = protect_program(program, ecc)
+    return program
 
 
 # ---------------------------------------------------------------------------

@@ -14,6 +14,7 @@ On a 1000+-node deployment the coordinator composes these primitives:
 """
 from __future__ import annotations
 
+import random
 import signal
 import time
 from dataclasses import dataclass, field
@@ -66,11 +67,23 @@ class StragglerWatchdog:
 
 
 def retry(fn, *args, attempts: int = 3, backoff_s: float = 0.1,
-          exceptions=(OSError, IOError), **kwargs):
+          jitter_s: float = 0.0, exceptions=(OSError, IOError), **kwargs):
+    """Call ``fn`` up to ``attempts`` times with exponential backoff.
+
+    ``attempts < 1`` raises ``ValueError`` (it used to fall through the
+    empty loop and silently return ``None`` — indistinguishable from a
+    successful call returning ``None``). ``jitter_s`` adds a uniform
+    random extra sleep in ``[0, jitter_s]`` per retry so a fleet of
+    workers retrying the same failed resource doesn't thunder back in
+    lockstep."""
+    if attempts < 1:
+        raise ValueError(f"retry needs attempts >= 1, got {attempts}")
+    if backoff_s < 0 or jitter_s < 0:
+        raise ValueError("backoff_s and jitter_s must be >= 0")
     for i in range(attempts):
         try:
             return fn(*args, **kwargs)
         except exceptions:
             if i == attempts - 1:
                 raise
-            time.sleep(backoff_s * (2 ** i))
+            time.sleep(backoff_s * (2 ** i) + random.uniform(0.0, jitter_s))

@@ -86,7 +86,10 @@ via ``dplan=`` — the serving plan cache's handle for skipping
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import inspect
+import itertools
 from typing import Any, Callable, Mapping
 
 import jax
@@ -205,12 +208,36 @@ class ReramPerLayerBackend(FloatBackend):
     """Per-layer bit-sliced INT8 crossbar matmul (``reram_linear``): same
     arithmetic as the fused path but weights are re-quantized and
     re-plane-encoded inside every traced call, one kernel launch per
-    matmul. Kept as the reference the fused kernel is tested against."""
+    matmul. Kept as the reference the fused kernel is tested against.
 
-    def __init__(self, params, config, *, interpret: bool = True):
+    ``fault_model`` (a :class:`repro.reliability.FaultModel`) injects
+    ReRAM non-idealities into each matmul's freshly encoded planes, keyed
+    per (MLP, layer) site so faults are independent across layers and
+    deterministic across calls. The zero-fault model takes the ideal path
+    bit-for-bit."""
+
+    def __init__(self, params, config, *, interpret: bool = True,
+                 fault_model=None):
         super().__init__(
             params, config,
             matmul=lambda a, w: reram_linear(a, w, interpret=interpret))
+        self.interpret = interpret
+        self.fault_model = fault_model
+
+    def apply_mlp(self, key, x, *, final_relu=True):
+        fm = self.fault_model
+        if fm is None or fm.is_ideal:
+            return super().apply_mlp(key, x, final_relu=final_relu)
+        # Site-keyed injection: the counter restarts at 0 for every
+        # apply_mlp call (traced or eager), so layer i of MLP `key`
+        # always draws from fold_in(seed, mlp_ix, i) — retrace-stable.
+        mlp_ix = 0 if key == "head" else key[1] + 1
+        layer_ix = itertools.count()
+        mm = lambda a, w: reram_linear(
+            a, w, interpret=self.interpret, fault_model=fm,
+            fault_key=fm.key_for(mlp_ix, next(layer_ix)))
+        return _pn._apply_mlp(self._mlp_params(key), x,
+                              final_relu=final_relu, matmul=mm)
 
 
 @register_backend("reram-fused")
@@ -232,10 +259,25 @@ class ReramFusedBackend(Backend):
     def __init__(self, params, config, *, program=None,
                  mode: str | None = None,
                  block_n: int | None = None, block_k: int | None = None,
-                 interpret: bool = True):
+                 interpret: bool = True, ecc=None, fault_model=None):
         super().__init__(params, config)
-        self.program = (program if program is not None
-                        else _pn.build_model_program(params))
+        if program is None:
+            program = _pn.build_model_program(params, ecc=ecc)
+        elif ecc is not None:
+            raise ValueError(
+                "pass ecc= to build_model_program when prebuilding the "
+                "program, not alongside program=")
+        if fault_model is not None and not fault_model.is_ideal:
+            # protect (at build) -> inject -> correct: the program the
+            # kernels see is the post-scrub state of the faulty planes.
+            # Without ECC the correction pass is a no-op pass-through and
+            # the faults land raw — the unprotected arm of the sweep.
+            from repro.reliability.ecc import correct_model_program
+            program = correct_model_program(
+                fault_model.apply_model_program(program))
+        self.program = program
+        self.ecc = ecc
+        self.fault_model = fault_model
         self.mode = mode if mode is not None else type(self).mode
         self.block_n = block_n
         self.block_k = block_k
@@ -285,9 +327,27 @@ class ReramFusedBackend(Backend):
             rows = spec.n_centers * spec.n_neighbors
             plans[f"sa{i}"] = self._plan_row(("sa", i), rows)
         plans["head"] = self._plan_row("head", 1)
-        return {"program_bytes": sum(nbytes.values()),
-                "program_bytes_per_mlp": nbytes,
-                "fused_plan": plans}
+        out = {"program_bytes": sum(nbytes.values()),
+               "program_bytes_per_mlp": nbytes,
+               "fused_plan": plans}
+        rel = {}
+        if self.fault_model is not None:
+            rel["fault_model"] = dataclasses.asdict(self.fault_model)
+        protected = {k: p for k, p in progs.items() if p.ecc is not None}
+        if protected:
+            from repro.reliability.ecc import ecc_overhead
+            per = {k: ecc_overhead(p) for k, p in protected.items()}
+            rel["ecc"] = {
+                "per_mlp": per,
+                "parity_cells": sum(o["parity_cells"] for o in per.values()),
+                "extra_arrays": sum(o["extra_arrays"] for o in per.values()),
+                "scrub_energy_j": sum(o["scrub_energy_j"]
+                                      for o in per.values()),
+                "scrub_cycles": sum(o["scrub_cycles"] for o in per.values()),
+            }
+        if rel:
+            out["reliability"] = rel
+        return out
 
     def _plan_row(self, key, rows):
         fp = self._fused_plan(key, rows)
@@ -930,13 +990,22 @@ def compile_model(params: Params, config: PointNetConfig, *,
                   backend: str = "float", schedule=None,
                   policy: PlanPolicy | None = None,
                   device_planning: bool | None = None,
+                  fault_model=None,
                   **backend_opts) -> CompiledModel:
     """Compile PointNet++ ``params`` for execution.
 
     backend  : registry name — 'float', 'reram' (per-layer INT8 crossbar),
                'reram-fused' (weight-stationary fused kernels), or anything
                added with :func:`register_backend`. ``backend_opts`` go to
-               the backend constructor (e.g. ``program=``, ``block_n=``).
+               the backend constructor (e.g. ``program=``, ``block_n=``,
+               ``ecc=`` on the fused backends).
+    fault_model : a :class:`repro.reliability.FaultModel` — inject ReRAM
+               non-idealities (conductance noise, stuck-at cells, ADC
+               clipping) into the compiled crossbar planes (DESIGN.md
+               §13). Only meaningful for crossbar backends; compiling a
+               backend without fault support (e.g. 'float' — it has no
+               cell planes to fault) raises ``ValueError``. The zero-fault
+               model is bitwise-identical to compiling without one.
     policy   : a :class:`~repro.core.policy.PlanPolicy` — the cost model
                that makes both scheduling decisions at compile time: the
                fused backends route their dataflow choice through its
@@ -980,6 +1049,14 @@ def compile_model(params: Params, config: PointNetConfig, *,
     if policy is not None and not isinstance(policy, PlanPolicy):
         raise TypeError(f"policy must be a PlanPolicy; got "
                         f"{type(policy).__name__}")
+    if fault_model is not None:
+        if "fault_model" not in inspect.signature(cls.__init__).parameters:
+            raise ValueError(
+                f"backend {backend!r} does not support fault injection "
+                f"(no fault_model= constructor option — the float path "
+                f"has no crossbar cell planes to fault); use a crossbar "
+                f"backend such as 'reram' or 'reram-fused'")
+        backend_opts["fault_model"] = fault_model
     if schedule is None and policy is not None:
         # the policy owns the ordering decision: per-workload intra choice
         spec = {"intra": "auto", "coordinated": policy.coordinated}

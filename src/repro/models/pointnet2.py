@@ -122,15 +122,19 @@ def init_params(key, config: PointNetConfig, n_classes: int = 40,
     return {"sa": sa, "head": head}
 
 
-def build_model_program(params: Params) -> dict:
+def build_model_program(params: Params, *, ecc=None) -> dict:
     """Program every MLP of the model into crossbars ('reram-fused'
     backend): one :class:`~repro.kernels.CrossbarProgram` per SA layer plus
     one for the classification head. Weights are quantized and
     plane-encoded here, exactly once — pass the result to
     ``forward``/``batched_forward`` and the per-forward hot path never
-    touches ``encode_planes``/``quantize_tensor`` on weights again."""
-    return {"sa": [build_program(mlp) for mlp in params["sa"]],
-            "head": build_program(params["head"])}
+    touches ``encode_planes``/``quantize_tensor`` on weights again.
+
+    ``ecc`` (an :class:`repro.reliability.EccConfig`, or True for the
+    default) Hamming-protects every program's spare columns at build time
+    (DESIGN.md §13); MVM results are unchanged."""
+    return {"sa": [build_program(mlp, ecc=ecc) for mlp in params["sa"]],
+            "head": build_program(params["head"], ecc=ecc)}
 
 
 # ---------------------------------------------------------------------------

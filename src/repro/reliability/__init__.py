@@ -1,0 +1,33 @@
+"""Reliability subsystem: ReRAM non-idealities, ECC, Pareto sweeps.
+
+DESIGN.md §13. Three pieces, stacked:
+
+  * :class:`FaultModel` (``faults``) — seeded, jit-compatible injection
+    of conductance noise / stuck-at cells / ADC clipping as a pure
+    transform on :class:`~repro.kernels.CrossbarProgram` cell planes;
+    every backend and dataflow inherits the faults unchanged via
+    ``compile_model(fault_model=...)``.
+  * ECC (``ecc``) — Hamming parity over the planes' spare crossbar
+    columns: encode at ``build_program(..., ecc=...)`` time, scrub at
+    the shift-add periphery (:func:`correct_program`), overheads priced
+    by :func:`ecc_overhead` from ``HWParams``.
+  * Pareto harness (``pareto``) — :func:`sweep` scores fault-rate x
+    protection grids on accuracy/energy/area, :func:`pareto_front` and
+    :func:`classify_archetypes` shape the frontier, and
+    ``PlanPolicy(reliability_target=...).select_protection`` picks the
+    cheapest point meeting an accuracy bound.
+"""
+from repro.reliability.ecc import (EccConfig, EccLayerLayout, EccSpec,
+                                   correct_model_program, correct_program,
+                                   ecc_overhead, protect_program)
+from repro.reliability.faults import FaultModel
+from repro.reliability.pareto import (ArchetypeBands, DesignPoint,
+                                      classify_archetypes, pareto_front,
+                                      sweep)
+
+__all__ = [
+    "ArchetypeBands", "DesignPoint", "EccConfig", "EccLayerLayout",
+    "EccSpec", "FaultModel", "classify_archetypes", "correct_model_program",
+    "correct_program", "ecc_overhead", "pareto_front", "protect_program",
+    "sweep",
+]

@@ -1,0 +1,388 @@
+"""Reliability subsystem: fault injection, ECC planes, Pareto harness.
+
+The acceptance contract, tested end to end:
+  * a zero-fault ``FaultModel`` is BITWISE-identical to the ideal path on
+    every crossbar backend (reram / reram-fused / -mtiled / -wstat), and
+    the float backend rejects ``fault_model=`` with a clear error;
+  * ECC protection never changes MVM results (parity lives under
+    ``col_mask = 0``), corrects EVERY single-cell stuck-at fault per
+    codeword — data or parity position, exhaustively over a codeword and
+    randomized across the program — and its energy surcharge shows up in
+    ``stats()``;
+  * the sweep harness reproduces a monotone accuracy-vs-fault-rate curve
+    that ECC measurably flattens, and
+    ``PlanPolicy(reliability_target=...)`` picks the cheapest point
+    meeting the bound;
+  * satellites: ``retry`` rejects ``attempts < 1`` and supports jittered
+    backoff; the quantizers reject NaN/Inf.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compile_model
+from repro.core.policy import PlanPolicy
+from repro.core.workload import PointNetConfig, SALayerSpec
+from repro.kernels.program import build_program, quantize_tensor
+from repro.launch.fault import retry
+from repro.models import pointnet2 as pn
+from repro.reliability import (ArchetypeBands, DesignPoint, EccConfig,
+                               FaultModel, classify_archetypes,
+                               correct_program, ecc_overhead, pareto_front,
+                               protect_program, sweep)
+from repro.reliability.ecc import hamming_r
+
+
+def tiny_config(n=64, c1=24, c2=8, k=4):
+    return PointNetConfig(name="tiny", n_points=n, layers=(
+        SALayerSpec(n_centers=c1, n_neighbors=k, in_features=4,
+                    mlp=(4, 8, 8, 16)),
+        SALayerSpec(n_centers=8, n_neighbors=k, in_features=16,
+                    mlp=(16, 16, 16, 32)),
+    ))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_config()
+    params = pn.init_params(jax.random.PRNGKey(0), cfg, n_classes=10)
+    cloud = jnp.asarray(np.random.default_rng(1).normal(size=(64, 3)),
+                        jnp.float32)
+    return cfg, params, cloud
+
+
+def small_program(seed=0, widths=(24, 48, 130, 10)):
+    key = jax.random.PRNGKey(seed)
+    layers = []
+    for k, n in zip(widths[:-1], widths[1:]):
+        key, k1, k2 = jax.random.split(key, 3)
+        layers.append((jax.random.normal(k1, (k, n)),
+                       jax.random.normal(k2, (n,))))
+    return layers
+
+
+# ---------------------------------------------------------------------------
+# FaultModel
+# ---------------------------------------------------------------------------
+
+def test_fault_model_validation():
+    with pytest.raises(ValueError, match="sigma"):
+        FaultModel(sigma=-0.1)
+    with pytest.raises(ValueError, match="p_stuck0"):
+        FaultModel(p_stuck0=1.5)
+    with pytest.raises(ValueError, match="adc_bits"):
+        FaultModel(adc_bits=0)
+
+
+def test_zero_fault_model_is_identity_object():
+    prog = build_program(small_program())
+    fm = FaultModel()
+    assert fm.is_ideal
+    assert fm.apply(prog) is prog          # bitwise by construction
+    # an ADC at least as wide as the cell clips nothing either
+    assert FaultModel(adc_bits=2).is_ideal_for(cell_bits=2)
+    assert not FaultModel(adc_bits=1).is_ideal_for(cell_bits=2)
+
+
+def test_fault_injection_seeded_and_deterministic():
+    prog = build_program(small_program())
+    fm = FaultModel(p_stuck0=0.05, sigma=0.2, seed=3)
+    a, b = fm.apply(prog), fm.apply(prog)
+    assert jnp.array_equal(a.planes, b.planes)
+    assert not jnp.array_equal(a.planes, prog.planes)
+    other = FaultModel(p_stuck0=0.05, sigma=0.2, seed=4).apply(prog)
+    assert not jnp.array_equal(a.planes, other.planes)
+
+
+def test_stuck_at_and_adc_semantics():
+    planes = jnp.full((4, 16, 16), 2, jnp.int8)
+    key = jax.random.PRNGKey(0)
+    s1 = FaultModel(p_stuck1=1.0).transform_planes(planes, key)
+    assert int(s1.min()) == int(s1.max()) == 3      # all forced to top level
+    s0 = FaultModel(p_stuck0=1.0).transform_planes(planes, key)
+    assert int(s0.max()) == 0
+    clipped = FaultModel(adc_bits=1).transform_planes(planes, key)
+    assert int(clipped.max()) == 1                  # 2-bit cells read 1-bit
+    # values and dtype stay in the cell domain under noise
+    noisy = FaultModel(sigma=5.0).transform_planes(planes, key)
+    assert noisy.dtype == planes.dtype
+    assert int(noisy.min()) >= 0 and int(noisy.max()) <= 3
+
+
+def test_zero_fault_bitwise_identical_on_every_crossbar_backend(setup):
+    cfg, params, cloud = setup
+    fm0 = FaultModel()
+    for be in ("reram", "reram-fused", "reram-fused-mtiled",
+               "reram-fused-wstat"):
+        ideal = compile_model(params, cfg, backend=be).forward(cloud)
+        faulted = compile_model(params, cfg, backend=be,
+                                fault_model=fm0).forward(cloud)
+        assert jnp.array_equal(ideal, faulted), be
+
+
+def test_float_backend_rejects_fault_model(setup):
+    cfg, params, _ = setup
+    with pytest.raises(ValueError, match="does not support fault"):
+        compile_model(params, cfg, backend="float", fault_model=FaultModel())
+
+
+def test_faults_actually_change_crossbar_output(setup):
+    cfg, params, cloud = setup
+    fm = FaultModel(p_stuck0=0.05, p_stuck1=0.05, seed=7)
+    ideal = compile_model(params, cfg, backend="reram-fused").forward(cloud)
+    faulty = compile_model(params, cfg, backend="reram-fused",
+                           fault_model=fm).forward(cloud)
+    assert not jnp.array_equal(ideal, faulty)
+    # and the per-layer reference backend degrades under the same model too
+    ideal_pl = compile_model(params, cfg, backend="reram").forward(cloud)
+    faulty_pl = compile_model(params, cfg, backend="reram",
+                              fault_model=fm).forward(cloud)
+    assert not jnp.array_equal(ideal_pl, faulty_pl)
+
+
+# ---------------------------------------------------------------------------
+# ECC
+# ---------------------------------------------------------------------------
+
+def test_hamming_r_values():
+    # smallest r with 2^r - r - 1 >= k: the classic SEC table
+    assert [hamming_r(k) for k in (1, 4, 11, 16, 26, 57)] == [2, 3, 4, 5,
+                                                              5, 6]
+
+
+def test_protected_program_is_mvm_equivalent():
+    layers = small_program()
+    prog = build_program(layers)
+    prot = build_program(layers, ecc=EccConfig(group=16))
+    for a, b in zip(prog.int_weights(), prot.int_weights()):
+        assert jnp.array_equal(a, b)
+    # parity columns sit strictly under col_mask = 0
+    for l, lay in enumerate(prot.ecc.layouts):
+        mask = np.asarray(prot.col_mask[l])
+        assert mask[lay.parity_start:lay.parity_start + lay.parity_cols].max() == 0
+
+
+def test_clean_scrub_is_bitwise_identity():
+    prot = build_program(small_program(), ecc=True)
+    rt = correct_program(prot)
+    assert jnp.array_equal(rt.planes, prot.planes)
+
+
+def test_ecc_corrects_every_single_cell_fault_in_a_codeword():
+    """Exhaustive over one codeword: every cell (all k data + all r parity
+    positions), forced to every wrong level, scrubs back bitwise."""
+    prot = build_program(small_program(widths=(8, 24, 10)),
+                         ecc=EccConfig(group=8))
+    lay = prot.ecc.layouts[0]
+    clean = np.asarray(prot.planes)
+    plane, row = 3, 5
+    data_cols = list(range(min(lay.k, lay.n_data)))           # group 0
+    parity_cols = list(range(lay.parity_start, lay.parity_start + lay.r))
+    for col in data_cols + parity_cols:
+        for level in range(4):
+            if level == clean[0, plane, row, col]:
+                continue
+            bad = clean.copy()
+            bad[0, plane, row, col] = level
+            fixed = correct_program(
+                dataclasses.replace(prot, planes=jnp.asarray(bad)))
+            assert np.array_equal(np.asarray(fixed.planes), clean), \
+                f"col={col} level={level}"
+
+
+def test_ecc_corrects_random_single_faults_across_program():
+    prot = build_program(small_program(), ecc=EccConfig(group=16))
+    clean = np.asarray(prot.planes)
+    rng = np.random.default_rng(0)
+    for _ in range(40):
+        l = rng.integers(0, prot.n_layers)
+        lay = prot.ecc.layouts[l]
+        p = rng.integers(0, prot.n_planes)
+        r = rng.integers(0, prot.d_pad)
+        c = rng.integers(0, lay.n_data + lay.parity_cols)
+        bad = clean.copy()
+        bad[l, p, r, c] = (bad[l, p, r, c] + rng.integers(1, 4)) % 4
+        fixed = correct_program(
+            dataclasses.replace(prot, planes=jnp.asarray(bad)))
+        assert np.array_equal(np.asarray(fixed.planes), clean)
+
+
+def test_ecc_widens_program_when_no_spare_columns():
+    """A layer whose real width fills d_pad has zero spare columns; the
+    protect pass must re-pad the whole program a crossbar edge wider."""
+    layers = small_program(widths=(8, 128, 10))
+    prog = build_program(layers)
+    assert prog.d_pad == 128
+    prot = build_program(layers, ecc=EccConfig(group=16))
+    assert prot.d_pad == 256
+    for a, b in zip(prog.int_weights(), prot.int_weights()):
+        assert jnp.array_equal(a, b)
+    assert jnp.array_equal(correct_program(prot).planes, prot.planes)
+
+
+def test_ecc_rejects_double_protection_and_missing_spec():
+    prot = build_program(small_program(), ecc=True)
+    with pytest.raises(ValueError, match="already"):
+        protect_program(prot)
+    with pytest.raises(ValueError, match="no ECC spec"):
+        correct_program(build_program(small_program()))
+    with pytest.raises(ValueError, match="no ECC spec"):
+        ecc_overhead(build_program(small_program()))
+
+
+def test_ecc_overhead_and_stats_surcharge(setup):
+    cfg, params, _ = setup
+    prot = build_program(small_program(), ecc=EccConfig(group=16))
+    ov = ecc_overhead(prot)
+    assert ov["parity_cols"] > 0 and ov["scrub_energy_j"] > 0
+    assert ov["area_overhead"] == ov["parity_cols"] / ov["data_cols"]
+    # the surcharge is visible on the compiled model
+    model = compile_model(params, cfg, backend="reram-fused",
+                          ecc=EccConfig(group=16),
+                          fault_model=FaultModel(p_stuck0=0.01, seed=1))
+    rel = model.stats()["reliability"]
+    assert rel["fault_model"]["p_stuck0"] == 0.01
+    assert rel["ecc"]["scrub_energy_j"] > 0
+    assert rel["ecc"]["extra_arrays"] >= 0
+    # unprotected + unfaulted compiles carry no reliability entry
+    assert "reliability" not in compile_model(
+        params, cfg, backend="reram-fused").stats()
+
+
+def test_protected_forward_bitwise_equals_unprotected(setup):
+    cfg, params, cloud = setup
+    a = compile_model(params, cfg, backend="reram-fused").forward(cloud)
+    b = compile_model(params, cfg, backend="reram-fused",
+                      ecc=EccConfig(group=8)).forward(cloud)
+    assert jnp.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Pareto harness + policy decision
+# ---------------------------------------------------------------------------
+
+def test_sweep_monotone_curve_ecc_flattens(setup):
+    """The §13 acceptance curve: raw accuracy degrades monotonically with
+    the stuck-cell rate; the ECC arm sits pointwise at-or-above it and
+    loses measurably less in total."""
+    cfg, params, _ = setup
+    pts = sweep(params, cfg, fault_rates=(0.0, 0.10, 0.12), n_clouds=16,
+                seed=0, n_classes=10, ecc_group=4)
+    none = [p.accuracy for p in pts if p.protection == "none"]
+    ecc = [p.accuracy for p in pts if p.protection == "ecc"]
+    assert none[0] == 1.0 and ecc[0] == 1.0       # zero faults, exact path
+    assert none == sorted(none, reverse=True)      # monotone degradation
+    assert none[-1] < 0.9                          # the cliff is real
+    assert all(e >= n for e, n in zip(ecc, none))  # ECC never worse
+    assert (ecc[0] - ecc[-1]) < (none[0] - none[-1])   # measurably flatter
+    # the protected arm pays for it: energy and area surcharges
+    e_none = next(p for p in pts if p.protection == "none")
+    e_ecc = next(p for p in pts if p.protection == "ecc")
+    assert e_ecc.energy_j > e_none.energy_j
+    assert e_ecc.area_arrays > e_none.area_arrays
+
+
+def _grid():
+    """Protection levels at one ambient fault rate: the genuine trade-off
+    surface (more protection = more accuracy = more energy/area)."""
+    mk = DesignPoint
+    return [
+        mk(0.1, "none", accuracy=0.60, energy_j=1.0, area_arrays=6),
+        mk(0.1, "ecc", accuracy=0.95, energy_j=1.2, area_arrays=9,
+           ecc_group=8),
+        mk(0.1, "ecc", accuracy=1.00, energy_j=1.4, area_arrays=12,
+           ecc_group=4),
+        mk(0.1, "ecc", accuracy=0.90, energy_j=1.5, area_arrays=12,
+           ecc_group=2),
+    ]
+
+
+def test_pareto_front_drops_dominated_points():
+    front = pareto_front(_grid())
+    # the over-paying under-performing level (group=2 row) is dominated
+    # by the group=8 one; the other three form the frontier
+    assert len(front) == 3
+    assert all(p.ecc_group != 2 for p in front)
+    assert {p.accuracy for p in front} == {0.60, 0.95, 1.00}
+
+
+def test_classify_archetypes_counts_and_bands():
+    out = classify_archetypes(_grid())
+    assert sum(out["counts"].values()) == 4
+    labels = {(p.protection, p.ecc_group): p.archetype
+              for p in out["points"]}
+    assert labels[("ecc", 4)] == "Fortress"       # holds the accuracy line
+    assert labels[("none", None)] == "SpeedDemon"  # cheapest, accuracy-blind
+    # widening the cheap band promotes the mid ECC point to Efficiency
+    wide = classify_archetypes(_grid(), ArchetypeBands(energy_band=0.5))
+    wlabels = {(p.protection, p.ecc_group): p.archetype
+               for p in wide["points"]}
+    assert wlabels[("ecc", 8)] == "Efficiency"
+    assert classify_archetypes([]) == {"points": [], "counts": {}}
+
+
+def test_select_protection_cheapest_meeting_target():
+    pts = _grid()
+    pick = PlanPolicy(reliability_target=0.9).select_protection(pts)
+    # three levels qualify; the group=8 one is the cheapest of them
+    assert pick.ecc_group == 8 and pick.energy_j == 1.2
+    # no target -> plain min-energy
+    free = PlanPolicy().select_protection(pts)
+    assert free.protection == "none" and free.energy_j == 1.0
+    with pytest.raises(ValueError, match="no design point meets"):
+        PlanPolicy(reliability_target=0.999).select_protection(
+            [p for p in pts if p.accuracy < 0.999])
+    with pytest.raises(ValueError, match="at least one"):
+        PlanPolicy().select_protection([])
+
+
+# ---------------------------------------------------------------------------
+# satellites: retry + quantizer guards
+# ---------------------------------------------------------------------------
+
+def test_retry_rejects_nonpositive_attempts():
+    with pytest.raises(ValueError, match="attempts >= 1"):
+        retry(lambda: 1, attempts=0)
+    with pytest.raises(ValueError, match="attempts >= 1"):
+        retry(lambda: 1, attempts=-2)
+    with pytest.raises(ValueError):
+        retry(lambda: 1, backoff_s=-0.1)
+    with pytest.raises(ValueError):
+        retry(lambda: 1, jitter_s=-1.0)
+
+
+def test_retry_with_jitter_still_returns_value():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise OSError("transient")
+        return "ok"
+
+    assert retry(flaky, attempts=5, backoff_s=0.0, jitter_s=0.001) == "ok"
+    assert len(calls) == 3
+
+
+@pytest.mark.parametrize("bad", [float("nan"), float("inf")])
+def test_quantize_tensor_rejects_nonfinite(bad):
+    x = jnp.ones((3, 3)).at[1, 1].set(bad)
+    with pytest.raises(ValueError, match="NaN/Inf"):
+        quantize_tensor(x)
+
+
+def test_build_program_rejects_poisoned_weights():
+    layers = small_program(widths=(8, 16, 10))
+    w, b = layers[0]
+    layers[0] = (w.at[0, 0].set(jnp.nan), b)
+    with pytest.raises(ValueError, match="NaN/Inf"):
+        build_program(layers)
+
+
+def test_quantize_tensor_guard_skips_tracers():
+    # under jit the values are abstract: the guard must not force them
+    out = jax.jit(lambda x: quantize_tensor(x)[0])(jnp.ones((4, 4)))
+    assert out.shape == (4, 4)

@@ -47,6 +47,45 @@ def test_quantization_error_bounded(seed):
     assert np.max(np.abs(w_int * scale - w)) <= scale / 2 + 1e-12
 
 
+@given(st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_bit_slice_roundtrip_exact_any_cell_width(seed):
+    """The encode path ECC builds on, at 1-bit (SLC), 2-bit (the default
+    MLC) and 4-bit cells: recombination is exact at every width and the
+    plane count is ceil(weight_bits / cell_bits)."""
+    rng = np.random.default_rng(seed)
+    w = rng.integers(-127, 128, size=(rng.integers(1, 40),
+                                      rng.integers(1, 40))).astype(np.int32)
+    for cell_bits in (1, 2, 4):
+        planes = bit_slice(w, weight_bits=8, cell_bits=cell_bits)
+        assert planes.shape[0] == -(-8 // cell_bits)
+        u = sum(planes[p].astype(np.int64) << (cell_bits * p)
+                for p in range(planes.shape[0]))
+        assert np.array_equal(u - 128, w)
+        assert planes.min() >= 0 and planes.max() <= 2 ** cell_bits - 1
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_crossbar_matmul_integer_exact_any_cell_width(seed):
+    rng = np.random.default_rng(seed)
+    n, m, b = rng.integers(1, 33, size=3)
+    x = rng.integers(-128, 128, size=(b, n)).astype(np.int32)
+    w = rng.integers(-127, 128, size=(n, m)).astype(np.int32)
+    for cell_bits in (1, 4):
+        planes = bit_slice(w, cell_bits=cell_bits)
+        out = crossbar_matmul(x, planes, cell_bits=cell_bits)
+        assert np.array_equal(out, x.astype(np.int64) @ w.astype(np.int64))
+
+
+@pytest.mark.parametrize("bad", [np.nan, np.inf, -np.inf])
+def test_quantize_weights_rejects_nonfinite(bad):
+    w = np.ones((4, 4))
+    w[2, 1] = bad
+    with pytest.raises(ValueError, match="NaN/Inf"):
+        quantize_weights(w)
+
+
 def test_no_accuracy_variation_property():
     """Scheduling never changes math: the quantized network output is a
     pure function of (weights, inputs) — crossbar evaluation equals plain
