@@ -23,10 +23,11 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from repro import compile_model
+from repro import FrameTracker, compile_model
 from repro.core.workload import PointNetConfig, SALayerSpec
 from repro.data.pointcloud import request_stream
-from repro.launch.serve import PointCloudServable, ServingEngine, ShapeBuckets
+from repro.launch.serve import (PointCloudServable, ServingEngine,
+                                ShapeBuckets, VirtualClock)
 from repro.models import pointnet2 as pn
 
 from .common import row
@@ -100,4 +101,48 @@ def serve(n_requests: int = 32):
             f"plan_hit_rate={hit_rate:.3f};"
             f"jit_traces={servable.jit_traces}"
             f"(warm={warm_traces})"))
+    rows.extend(serve_lidar(max(n_requests // 2, 12)))
+    return rows
+
+
+#: virtual seconds per served batch on the LiDAR rows — every monotonic()
+#: tick advances the VirtualClock by this, so latency percentiles and
+#: deadline misses are exact run-to-run (the rows below gate at ratio 1.0)
+_LIDAR_SERVICE_S = 2e-3
+
+
+def serve_lidar(n_frames: int = 16):
+    """Deadline scheduling + frame-coherent plan reuse on one coherent
+    LiDAR stream (``request_stream(mode='lidar')``), FIFO vs EDF.
+
+    Deliberately overloaded — 800 frames/s against 2 virtual ms per
+    batch-1 serve — so deadlines bind: every 3rd frame is urgent (4 ms
+    budget), the rest relaxed (100 ms). FIFO makes urgent frames queue
+    behind relaxed ones; EDF reorders and meets them. All timing runs on
+    a :class:`VirtualClock`, so p50/p99 and the miss rates are
+    DETERMINISTIC — these rows regression-gate bit-exactly in CI
+    (``check_bench --require serve/lidar_stream``)."""
+    model = _tiny_model()
+    stream = list(request_stream(n_frames, rate_hz=800.0, n_points=(64,),
+                                 pool=4, seed=0, mode="lidar"))
+    rows = []
+    for sched in ("fifo", "edf"):
+        servable = PointCloudServable(
+            model, buckets=ShapeBuckets(points=(64,), batch=(1,)),
+            frame_reuse=FrameTracker(tol=1e-3))
+        engine = ServingEngine(servable, scheduler=sched, max_batch=1,
+                               clock=VirtualClock(tick_s=_LIDAR_SERVICE_S))
+        engine.seed_service_estimate(64, _LIDAR_SERVICE_S)
+        stats = engine.serve_stream(
+            stream, payload_of=lambda it: it[1],
+            deadline_us=lambda it: 4_000 if it[2] % 3 == 0 else 100_000)
+        ft = stats["frame_tracker"]
+        us = stats["wall_s"] / max(stats["n_requests"], 1) * 1e6
+        rows.append(row(
+            f"serve/lidar_stream/{sched}/{n_frames}f", us,
+            f"p50_ms={stats['p50_ms']:.3f};p99_ms={stats['p99_ms']:.3f};"
+            f"miss_rate={stats['deadline_miss_rate']:.3f};"
+            f"misses={stats['n_deadline_misses']}/{stats['n_deadlined']};"
+            f"frame_hit_rate={ft['hit_rate']:.3f};"
+            f"frame_hits={ft['frame_hits']}"))
     return rows

@@ -124,7 +124,8 @@ fused kernels only stream activations through it:
 (2, 8)
 
 **Serving** — the request path over any compiled model
-(``repro.launch.serve``): a FIFO queue with continuous batching, requests
+(``repro.launch.serve``): a pluggable :class:`Scheduler` (FIFO default,
+EDF for deadline/priority streams) with continuous batching, requests
 padded into point-count shape buckets (ONE jit trace per bucket — padded
 logits are bitwise-equal to the unpadded ``forward`` by the bucketing
 contract), and a content-keyed :class:`PlanCache` so repeated clouds skip
@@ -138,6 +139,20 @@ FPS/kNN + Algorithm-1 planning entirely:
 >>> bool(jnp.all(jnp.asarray(r1.result) == dp.forward(cloud)))
 True
 >>> eng.stats()["plan_cache"]["hits"]               # repeat cloud hit
+1
+
+For temporally coherent LiDAR streams a :class:`FrameTracker` adds the
+frame-coherent fast path: a frame within ``tol`` of the last-planned
+anchor reuses its :class:`DevicePlan` without keying or planning — safe
+because planned logits are bitwise order-invariant in the plan:
+
+>>> eng = repro.ServingEngine(repro.PointCloudServable(
+...     dp, buckets=repro.ShapeBuckets(points=(64,), batch=(1, 2)),
+...     frame_reuse=repro.FrameTracker(tol=1e-3)))
+>>> _ = eng.submit(np.asarray(cloud))                      # plans (anchor)
+>>> _ = eng.submit(np.asarray(cloud) + np.float32(1e-5))   # near-duplicate
+>>> _ = eng.drain()
+>>> eng.stats()["frame_tracker"]["frame_hits"]
 1
 
 **Reliability** — ReRAM non-idealities and the defense
@@ -172,27 +187,33 @@ backend table and the paper-section → module map.
 """
 from repro.core.energy import RooflineParams
 from repro.core.policy import PlanPolicy
-from repro.core.schedule import (DevicePlan, ExecutionPlan, MODE_PRESETS,
-                                 PlanCache, build_plan, cloud_content_key)
+from repro.core.schedule import (DevicePlan, ExecutionPlan, FrameTracker,
+                                 MODE_PRESETS, PlanCache, build_plan,
+                                 cloud_content_key, frame_fingerprint)
 from repro.core.workload import (PAPER_MODELS, PointNetConfig,
                                  PointNetWorkload)
 from repro.kernels import CrossbarProgram
-from repro.launch.serve import (LMServable, PointCloudServable, Request,
-                                Servable, ServingEngine, ShapeBuckets)
+from repro.launch.serve import (EDFScheduler, FIFOScheduler, LMServable,
+                                PointCloudServable, Request, Scheduler,
+                                Servable, ServingEngine, ShapeBuckets,
+                                VirtualClock)
 from repro.models.backend import (Backend, CompiledModel, available_backends,
                                   compile_model, register_backend)
 from repro import reliability
 from repro.reliability import FaultModel
 
-__version__ = "0.8.0"
+__version__ = "0.9.0"
 
 __all__ = [
     "Backend",
     "CompiledModel",
     "CrossbarProgram",
     "DevicePlan",
+    "EDFScheduler",
     "ExecutionPlan",
+    "FIFOScheduler",
     "FaultModel",
+    "FrameTracker",
     "LMServable",
     "MODE_PRESETS",
     "PAPER_MODELS",
@@ -203,13 +224,16 @@ __all__ = [
     "PointNetWorkload",
     "Request",
     "RooflineParams",
+    "Scheduler",
     "Servable",
     "ServingEngine",
     "ShapeBuckets",
+    "VirtualClock",
     "available_backends",
     "build_plan",
     "cloud_content_key",
     "compile_model",
+    "frame_fingerprint",
     "register_backend",
     "reliability",
     "__version__",

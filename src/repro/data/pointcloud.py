@@ -135,23 +135,66 @@ class PointCloudDataset:
 
 def request_stream(n_requests: int, *, rate_hz: float = 200.0,
                    n_points=(1024,), pool: int = 8,
-                   repeat_p: float = 0.7, seed: int = 0):
+                   repeat_p: float = 0.7, seed: int = 0,
+                   mode: str = "pool", drift: float = 2e-5,
+                   jitter: float = 5e-6):
     """Timed request arrivals for the serving tier: yields ``n_requests``
-    tuples ``(t_arrival, cloud, label)`` with Poisson arrivals at
-    ``rate_hz`` (exponential inter-arrival gaps).
+    tuples ``(t_arrival, cloud, label)``.
 
-    Clouds come from a ``pool`` of distinct synthetic clouds; each request
-    repeats an already-seen pool member with probability ``repeat_p`` —
-    the temporally-coherent stream of the paper's driving setting
-    (consecutive sweeps see the same objects), and exactly what the
-    content-keyed plan cache exploits: a repeated cloud is a guaranteed
-    cache hit, so a stream at ``repeat_p > 0`` measures hit-rate > 0.
-    Pool members draw their point count from ``n_points`` (cycled), so a
-    multi-bucket stream exercises bucketed batching too."""
+    ``mode="pool"`` (default): Poisson arrivals at ``rate_hz``
+    (exponential inter-arrival gaps) drawn from a ``pool`` of distinct
+    synthetic clouds; each request repeats an already-seen pool member
+    with probability ``repeat_p`` — the temporally-coherent stream of the
+    paper's driving setting (consecutive sweeps see the same objects),
+    and exactly what the content-keyed plan cache exploits: a repeated
+    cloud is a guaranteed cache hit, so a stream at ``repeat_p > 0``
+    measures hit-rate > 0. Pool members draw their point count from
+    ``n_points`` (cycled), so a multi-bucket stream exercises bucketed
+    batching too.
+
+    ``mode="lidar"``: one periodic sensor at ``rate_hz`` frames/s —
+    arrivals at ``f / rate_hz`` and the third tuple element is the frame
+    index, not a label. Each frame is the SAME scene evolved slightly: a
+    ``pool`` of object clusters (scaled synthetic clouds at fixed
+    centers) whose centers translate by ``drift`` per frame along fixed
+    per-cluster headings, plus i.i.d. per-point gaussian ``jitter`` per
+    frame. Consecutive frames therefore differ by a bounded per-point
+    displacement (~``drift + 3*jitter``) — never bitwise-equal (every
+    frame defeats the exact-key plan cache) but within a
+    :class:`~repro.core.schedule.FrameTracker` tolerance, which is the
+    reuse structure real LiDAR has and the frame-coherent fast path
+    exists for. Frame point count is ``n_points[0]``; ``repeat_p`` is
+    ignored."""
     if not 0.0 <= repeat_p <= 1.0:
         raise ValueError(f"repeat_p must be in [0, 1]; got {repeat_p}")
+    if mode not in ("pool", "lidar"):
+        raise ValueError(f"mode must be 'pool' or 'lidar'; got {mode!r}")
     rng = np.random.default_rng(seed)
     sizes = tuple(int(n) for n in n_points)
+
+    if mode == "lidar":
+        if drift < 0 or jitter < 0:
+            raise ValueError("drift and jitter must be >= 0")
+        n = sizes[0]
+        per = n // pool
+        counts = [per + (1 if i < n - per * pool else 0)
+                  for i in range(pool)]
+        clusters = [0.25 * synthetic_cloud(i % N_CLASSES, counts[i],
+                                           seed=seed * 7919 + i)
+                    for i in range(pool)]
+        centers = rng.uniform(-0.7, 0.7, size=(pool, 3))
+        heading = rng.normal(size=(pool, 3))
+        heading /= np.maximum(
+            np.linalg.norm(heading, axis=1, keepdims=True), 1e-9)
+        for f in range(n_requests):
+            shifted = [c + (centers[i] + f * drift * heading[i])
+                       for i, c in enumerate(clusters)]
+            cloud = np.concatenate(shifted, axis=0)
+            if jitter > 0:
+                cloud = cloud + rng.normal(0.0, jitter, cloud.shape)
+            yield f / rate_hz, cloud.astype(np.float32), f
+        return
+
     members = [synthetic_cloud(i % N_CLASSES, sizes[i % len(sizes)],
                                seed=seed * 7919 + i)
                for i in range(pool)]

@@ -33,24 +33,43 @@ True
 >>> _ = engine.submit(cloud); _ = engine.drain()
 >>> engine.stats()["plan_cache"]["hits"]        # repeat -> planning skipped
 1
+
+Scheduling is pluggable (``scheduler="fifo"`` is the default;
+``"edf"`` adds deadline/priority awareness for streaming LiDAR) and
+a pure policy — it reorders service, never changes logits:
+
+>>> eng = ServingEngine(PointCloudServable(
+...     model, buckets=ShapeBuckets(points=(64,), batch=(1, 2))),
+...     scheduler="edf", max_batch=1)
+>>> slow = eng.submit(cloud, t=0.0, deadline_us=100_000)
+>>> urgent = eng.submit(cloud * 0.5, t=0.0, deadline_us=1_000)
+>>> [r.id for r in eng.drain()]                 # earliest deadline first
+[1, 0]
 """
 from repro.launch.mesh import (MESH_AXES, batch_axes, make_production_mesh,
                                make_replica_mesh, make_test_mesh)
-from repro.launch.serve import (LMServable, PointCloudServable, Request,
-                                Servable, ServingEngine, ShapeBuckets,
-                                generate, make_serve_step)
+from repro.launch.serve import (EDFScheduler, FIFOScheduler, LMServable,
+                                PointCloudServable, Request, SCHEDULERS,
+                                Scheduler, Servable, ServingEngine,
+                                ShapeBuckets, VirtualClock, generate,
+                                make_serve_step)
 from repro.launch.sharding import (cache_pspecs, input_pspecs,
                                    named_shardings, param_pspecs,
                                    replica_pspecs, shard_batch, state_pspecs)
 
 __all__ = [
+    "EDFScheduler",
+    "FIFOScheduler",
     "LMServable",
     "MESH_AXES",
     "PointCloudServable",
     "Request",
+    "SCHEDULERS",
+    "Scheduler",
     "Servable",
     "ServingEngine",
     "ShapeBuckets",
+    "VirtualClock",
     "batch_axes",
     "cache_pspecs",
     "generate",

@@ -4,10 +4,18 @@ The paper's setting is latency-bound streaming inference (LiDAR sweeps
 arriving continuously); this module is the software tier that turns the
 repo's compiled artifacts into a request path:
 
-  ``ServingEngine``       — FIFO request queue + continuous batching: each
-                            step takes the oldest request, skims every
-                            queued request in the SAME shape bucket (up to
-                            the batch limit), and runs them as one batch.
+  ``ServingEngine``       — request queue + continuous batching behind a
+                            pluggable :class:`Scheduler`: each step asks
+                            the scheduler for one same-bucket batch and
+                            runs it. :class:`FIFOScheduler` (default) is
+                            the PR-7 discipline — oldest request fixes the
+                            bucket, same-bucket requests skim in FIFO
+                            order; :class:`EDFScheduler` adds per-request
+                            ``deadline_us``/``priority``
+                            (earliest-deadline-first within a priority
+                            tier, deadline-aware batch admission, and an
+                            aging bound so nothing starves) — the
+                            streaming-LiDAR discipline (DESIGN.md §14).
   ``PointCloudServable``  — the point-cloud adapter over ``CompiledModel``:
                             pads requests into point-count shape buckets so
                             the jitted batched forward retraces only once
@@ -30,6 +38,7 @@ what the dry-run lowers for the decode_32k / long_500k shapes.
 """
 from __future__ import annotations
 
+import math
 import time
 from collections import deque
 from dataclasses import dataclass
@@ -41,7 +50,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.schedule import DevicePlan, PlanCache, cloud_content_key
+from repro.core.schedule import (DevicePlan, FrameTracker, PlanCache,
+                                 cloud_content_key)
 from repro.models import lm
 
 __all__ = [
@@ -50,10 +60,50 @@ __all__ = [
     "Servable",
     "PointCloudServable",
     "LMServable",
+    "Scheduler",
+    "FIFOScheduler",
+    "EDFScheduler",
+    "SCHEDULERS",
+    "VirtualClock",
     "ServingEngine",
     "make_serve_step",
     "generate",
 ]
+
+
+# ---------------------------------------------------------------------------
+# clocks
+# ---------------------------------------------------------------------------
+
+class VirtualClock:
+    """Deterministic injectable clock for the serving tier.
+
+    ``ServingEngine`` measures batch service time as the delta between
+    two ``clock.monotonic()`` calls; on the default wall clock
+    (``time``), a GC pause or a noisy CI host lands inside that window
+    and inflates p99 nondeterministically. A ``VirtualClock`` advances
+    by exactly ``tick_s`` on every ``monotonic()`` call instead, so each
+    served batch costs one deterministic virtual tick and every latency
+    percentile — and every deadline-miss decision — is a pure function
+    of the arrival stream and the scheduler. The seeded
+    ``serve/lidar_stream`` bench rows and the scheduler regression
+    tests run on it."""
+
+    def __init__(self, tick_s: float = 0.0, *, start: float = 0.0):
+        if tick_s < 0.0:
+            raise ValueError(f"tick_s must be >= 0; got {tick_s}")
+        self.tick_s = float(tick_s)
+        self.t = float(start)
+
+    def monotonic(self) -> float:
+        self.t += self.tick_s
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        """Manually advance the clock by ``dt`` seconds."""
+        if dt < 0.0:
+            raise ValueError(f"dt must be >= 0; got {dt}")
+        self.t += float(dt)
 
 
 # ---------------------------------------------------------------------------
@@ -111,17 +161,37 @@ class ShapeBuckets:
 class Request:
     """One queued unit of work. ``payload`` is whatever the servable
     understands (a cloud for ``PointCloudServable``, a 1-D prompt for
-    ``LMServable``); ``result`` and ``t_done`` are filled by the engine."""
+    ``LMServable``); ``result`` and ``t_done`` are filled by the engine.
+
+    ``deadline_us`` is the request's latency budget in microseconds
+    *relative to its arrival* (None = no deadline); ``priority`` is an
+    integer tier, higher = more urgent. Both are FIFO-inert under the
+    default :class:`FIFOScheduler` and drive :class:`EDFScheduler`."""
 
     id: int
     payload: Any
     t_arrival: float = 0.0
+    deadline_us: float | None = None
+    priority: int = 0
     result: Any = None
     t_done: float | None = None
 
     @property
     def latency(self) -> float | None:
         return None if self.t_done is None else self.t_done - self.t_arrival
+
+    @property
+    def deadline(self) -> float | None:
+        """Absolute deadline on the arrival clock (seconds), or None."""
+        return (None if self.deadline_us is None
+                else self.t_arrival + self.deadline_us * 1e-6)
+
+    @property
+    def missed(self) -> bool:
+        """True iff the request had a deadline and completed past it
+        (False while still queued)."""
+        return (self.t_done is not None and self.deadline is not None
+                and self.t_done > self.deadline)
 
 
 class Servable:
@@ -141,6 +211,165 @@ class Servable:
 
     def stats(self) -> dict:
         return {}
+
+
+# ---------------------------------------------------------------------------
+# schedulers: the pluggable queue discipline
+# ---------------------------------------------------------------------------
+
+class Scheduler:
+    """The engine's pluggable queue discipline.
+
+    Owns the pending requests: :meth:`push` enqueues, :meth:`select`
+    removes and returns ONE same-bucket batch (the engine runs it as one
+    ``run_batch``), :meth:`pending` snapshots what is still queued in
+    arrival order. ``select`` receives ``bucket_of`` (payload → bucket
+    key), ``max_batch``, the current time ``now`` and an optional
+    ``est_service(bucket, batch_size) -> seconds`` estimator (the
+    engine's measured EMA) for deadline feasibility decisions.
+
+    Contract every scheduler must keep: each pushed request is selected
+    exactly once (no loss, no duplication), and a selected batch is
+    same-bucket (the servable pads/stacks it as one shape)."""
+
+    name = "scheduler"
+
+    def __init__(self):
+        self._pending: deque[Request] = deque()
+
+    def push(self, req: Request) -> None:
+        self._pending.append(req)
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def pending(self) -> tuple[Request, ...]:
+        """Still-queued requests, in arrival order."""
+        return tuple(self._pending)
+
+    def select(self, *, bucket_of: Callable[[Any], Any], max_batch: int,
+               now: float = 0.0,
+               est_service: Callable[[Any, int], float] | None = None,
+               ) -> list[Request]:
+        raise NotImplementedError
+
+
+class FIFOScheduler(Scheduler):
+    """PR-7 discipline, unchanged: the oldest request fixes the shape
+    bucket; every queued same-bucket request joins in FIFO order up to
+    ``max_batch``; other buckets keep their queue position. Deadlines
+    and priorities are carried but ignored — FIFO is the policy
+    baseline the EDF rows are compared against."""
+
+    name = "fifo"
+
+    def select(self, *, bucket_of, max_batch, now=0.0, est_service=None):
+        if not self._pending:
+            return []
+        bucket = bucket_of(self._pending[0].payload)
+        batch: list[Request] = []
+        rest: deque[Request] = deque()
+        while self._pending:
+            req = self._pending.popleft()
+            if (len(batch) < max_batch
+                    and bucket_of(req.payload) == bucket):
+                batch.append(req)
+            else:
+                rest.append(req)
+        self._pending = rest
+        return batch
+
+
+class EDFScheduler(Scheduler):
+    """Deadline/priority discipline for streaming LiDAR (DESIGN.md §14).
+
+    Selection order (most-urgent first):
+
+    1. **aged** requests — anything waiting ``aging_s`` or longer
+       escalates past every priority and deadline, FIFO among
+       themselves. This is the starvation bound: the oldest aged
+       request is ALWAYS in the next batch (property-tested), so no
+       admitted request waits more than the aging window plus its
+       bucket's service seniority.
+    2. higher ``priority`` tier first;
+    3. within a tier, **feasible** deadlines (meetable given the
+       service estimate: ``now + est <= deadline``; no deadline counts
+       as feasible) before infeasible ones — a lost cause must never
+       delay a request that can still make it;
+    4. earliest absolute deadline first (no deadline sorts last);
+    5. FIFO (arrival id) on ties — equal-priority equal-deadline
+       requests keep their arrival order.
+
+    Batch admission: the head request fixes the bucket; candidates join
+    in the order above only while the batch stays *deadline-safe* —
+    growing the batch to size ``b+1`` (estimated completion
+    ``now + est_service(bucket, b+1)``) must not blow the candidate's
+    own still-meetable deadline, nor the deadline of any request
+    already admitted. A candidate whose deadline this batch would blow
+    keeps its queue slot (it rides a later, smaller batch or ages);
+    aged requests bypass admission entirely — the starvation bound
+    dominates the deadline economics."""
+
+    name = "edf"
+
+    def __init__(self, *, aging_s: float | None = 1.0):
+        super().__init__()
+        if aging_s is not None and aging_s <= 0.0:
+            raise ValueError(f"aging_s must be > 0 or None; got {aging_s}")
+        self.aging_s = aging_s
+
+    def _aged(self, req: Request, now: float) -> bool:
+        return (self.aging_s is not None
+                and now - req.t_arrival >= self.aging_s)
+
+    def _key(self, req: Request, now: float, est0: float):
+        if self._aged(req, now):
+            return (0, 0, 0, 0.0, req.id)          # FIFO among the aged
+        dl = req.deadline
+        infeasible = dl is not None and now + est0 > dl
+        return (1, -req.priority, 1 if infeasible else 0,
+                math.inf if dl is None else dl, req.id)
+
+    def select(self, *, bucket_of, max_batch, now=0.0, est_service=None):
+        if not self._pending:
+            return []
+        est = est_service if est_service is not None else lambda b, n: 0.0
+        order = sorted(
+            self._pending,
+            key=lambda r: self._key(r, now, est(bucket_of(r.payload), 1)))
+        head = order[0]
+        bucket = bucket_of(head.payload)
+        batch = [head]
+        for cand in order[1:]:
+            if len(batch) >= max_batch:
+                break
+            if bucket_of(cand.payload) != bucket:
+                continue
+            t_done = now + est(bucket, len(batch) + 1)
+            if not self._aged(cand, now):
+                dl = cand.deadline
+                if (dl is not None and t_done > dl
+                        and now + est(bucket, 1) <= dl):
+                    # this batch would blow a still-meetable deadline:
+                    # keep the candidate queued for a batch it can make
+                    continue
+                if any(r.deadline is not None and t_done > r.deadline
+                       and not self._aged(r, now) for r in batch):
+                    # growing the batch blows an admitted deadline; any
+                    # further growth completes no earlier — stop here
+                    break
+            batch.append(cand)
+        selected = {id(r) for r in batch}
+        self._pending = deque(r for r in self._pending
+                              if id(r) not in selected)
+        return batch
+
+
+#: registry for ``ServingEngine(scheduler="fifo" | "edf")``
+SCHEDULERS: dict[str, type[Scheduler]] = {
+    "fifo": FIFOScheduler,
+    "edf": EDFScheduler,
+}
 
 
 # ---------------------------------------------------------------------------
@@ -179,7 +408,8 @@ class PointCloudServable(Servable):
 
     def __init__(self, model, *, buckets: ShapeBuckets | None = None,
                  plan_cache: PlanCache | bool | None = True,
-                 mesh=None):
+                 mesh=None,
+                 frame_reuse: FrameTracker | bool = False):
         self.model = model
         self.buckets = buckets if buckets is not None else ShapeBuckets()
         self.max_batch = self.buckets.max_batch
@@ -199,6 +429,19 @@ class PointCloudServable(Servable):
                     "per-cloud plan to cache (baseline schedule or "
                     "compile-time DevicePlan)")
             self.plan_cache = plan_cache
+        # frame-coherent plan reuse (streaming LiDAR): a near-duplicate
+        # of the last-planned frame skips keying + planning entirely and
+        # serves the anchor's DevicePlan (bitwise-safe: logits are
+        # order-invariant in the plan — see FrameTracker)
+        if isinstance(frame_reuse, FrameTracker):
+            self.frame_tracker = frame_reuse
+        else:
+            self.frame_tracker = FrameTracker() if frame_reuse else None
+        if self.frame_tracker is not None and self.plan_cache is None:
+            raise ValueError(
+                "frame_reuse= needs the per-cloud plan path (a planned "
+                "schedule with plan_cache enabled); this servable has "
+                "no plan to reuse across frames")
         self.requests = 0
         self.batches = 0
         self.jit_traces = 0
@@ -228,13 +471,20 @@ class PointCloudServable(Servable):
         return self.buckets.point_bucket(np.asarray(payload).shape[0])
 
     def _plan_for(self, padded, n: int):
+        if self.frame_tracker is not None:
+            plan = self.frame_tracker.lookup(padded, n_valid=n)
+            if plan is not None:
+                return plan
         key = cloud_content_key(padded, n_valid=n)
         if self._jit_build is not None:
             build = lambda: self._jit_build(jnp.asarray(padded),
                                             jnp.int32(n))
         else:
             build = lambda: self.model.build_device_plan(padded, n_valid=n)
-        return self.plan_cache.get_or_build(key, build)
+        plan = self.plan_cache.get_or_build(key, build)
+        if self.frame_tracker is not None:
+            self.frame_tracker.update(padded, plan, n_valid=n)
+        return plan
 
     def run_batch(self, payloads: list) -> list:
         clouds = [np.asarray(p, np.float32) for p in payloads]
@@ -289,6 +539,8 @@ class PointCloudServable(Servable):
              "trace_shapes": list(self.trace_shapes)}
         if self.plan_cache is not None:
             s["plan_cache"] = self.plan_cache.stats()
+        if self.frame_tracker is not None:
+            s["frame_tracker"] = self.frame_tracker.stats()
         return s
 
 
@@ -401,51 +653,105 @@ class LMServable(Servable):
 # ---------------------------------------------------------------------------
 
 class ServingEngine:
-    """FIFO queue + continuous batching over one :class:`Servable`.
+    """Scheduled queue + continuous batching over one :class:`Servable`.
 
-    :meth:`step` forms one batch per call: the head request fixes the
-    shape bucket, every queued request in the same bucket joins (FIFO
-    order preserved within the bucket; other buckets keep their place for
-    the next step) up to ``max_batch``, and the batch runs as one
-    ``run_batch``. :meth:`drain` steps until empty; :meth:`serve_stream`
-    replays a timed arrival stream against a virtual clock — service time
-    is the measured wall time of each batch — and reports p50/p99 request
-    latency and throughput, the serve bench's measurement core.
+    :meth:`step` forms one batch per call by asking the
+    :class:`Scheduler` (default :class:`FIFOScheduler`; pass
+    ``scheduler="edf"`` or any :class:`Scheduler` instance) for one
+    same-bucket batch and running it as one ``run_batch``. Scheduling is
+    a pure *policy*: served results are bitwise-identical under every
+    scheduler (only order and latency change — tested). :meth:`drain`
+    steps until empty; :meth:`serve_stream` replays a timed arrival
+    stream against a virtual clock — service time is measured on the
+    injectable ``clock`` (wall by default; a :class:`VirtualClock` makes
+    every percentile and deadline decision deterministic) — and reports
+    p50/p99 request latency, throughput and deadline-miss rate, the
+    serve bench's measurement core.
+
+    The engine also keeps a per-(bucket, batch-size) EMA of measured
+    batch service time (:meth:`service_estimate`), which deadline-aware
+    schedulers use for feasibility and batch admission; seed it with
+    :meth:`seed_service_estimate` for deterministic tests.
     """
 
-    def __init__(self, servable: Servable, *, max_batch: int | None = None):
+    def __init__(self, servable: Servable, *, max_batch: int | None = None,
+                 scheduler: Scheduler | str | None = None, clock=None):
         self.servable = servable
         self.max_batch = (servable.max_batch if max_batch is None
                           else min(int(max_batch), servable.max_batch))
-        self.queue: deque[Request] = deque()
+        if scheduler is None:
+            scheduler = FIFOScheduler()
+        elif isinstance(scheduler, str):
+            if scheduler not in SCHEDULERS:
+                raise ValueError(
+                    f"unknown scheduler {scheduler!r}; available: "
+                    f"{sorted(SCHEDULERS)}")
+            scheduler = SCHEDULERS[scheduler]()
+        self.scheduler = scheduler
+        self.clock = clock if clock is not None else time
         self._next_id = 0
         self.completed: list[Request] = []
+        #: measured EMA of batch service seconds: bucket -> {batch_size:
+        #: seconds}; `service_estimate` answers from it
+        self._svc: dict[Any, dict[int, float]] = {}
+        self.default_service_s = 0.0
 
-    def submit(self, payload, *, t: float = 0.0) -> Request:
+    @property
+    def queue(self) -> tuple[Request, ...]:
+        """Still-queued requests in arrival order (scheduler-owned)."""
+        return self.scheduler.pending()
+
+    # -- service-time model -------------------------------------------------
+
+    def service_estimate(self, bucket, batch_size: int = 1) -> float:
+        """Estimated seconds to serve a ``batch_size`` batch of
+        ``bucket``: the EMA recorded at the smallest measured batch size
+        >= ``batch_size`` (conservative), else the largest measured,
+        else ``default_service_s``."""
+        sizes = self._svc.get(bucket)
+        if not sizes:
+            return self.default_service_s
+        for s in sorted(sizes):
+            if s >= batch_size:
+                return sizes[s]
+        return sizes[max(sizes)]
+
+    def seed_service_estimate(self, bucket, seconds: float, *,
+                              batch_size: int = 1) -> None:
+        """Pin the estimate for (bucket, batch_size) — deterministic
+        scheduling decisions in tests and benches."""
+        self._svc.setdefault(bucket, {})[int(batch_size)] = float(seconds)
+
+    def _record_service(self, bucket, batch_size: int, dt: float) -> None:
+        sizes = self._svc.setdefault(bucket, {})
+        prev = sizes.get(int(batch_size))
+        sizes[int(batch_size)] = (dt if prev is None
+                                  else 0.7 * prev + 0.3 * dt)
+
+    # -- the request path ---------------------------------------------------
+
+    def submit(self, payload, *, t: float = 0.0,
+               deadline_us: float | None = None,
+               priority: int = 0) -> Request:
         """Enqueue one request (``t`` is its arrival time on whatever
-        clock the caller keeps) and return its :class:`Request` handle —
-        ``result`` is filled when a :meth:`step` serves it."""
-        req = Request(id=self._next_id, payload=payload, t_arrival=t)
+        clock the caller keeps; ``deadline_us`` a latency budget relative
+        to it, ``priority`` an integer tier — higher is more urgent) and
+        return its :class:`Request` handle — ``result`` is filled when a
+        :meth:`step` serves it."""
+        req = Request(id=self._next_id, payload=payload, t_arrival=t,
+                      deadline_us=deadline_us, priority=int(priority))
         self._next_id += 1
-        self.queue.append(req)
+        self.scheduler.push(req)
         return req
 
     def step(self, *, now: float = 0.0) -> list[Request]:
-        """Serve ONE batch (see class docstring) and return the completed
+        """Serve ONE scheduler-selected batch and return the completed
         requests; [] when the queue is empty."""
-        if not self.queue:
+        batch = self.scheduler.select(
+            bucket_of=self.servable.bucket_of, max_batch=self.max_batch,
+            now=now, est_service=self.service_estimate)
+        if not batch:
             return []
-        bucket = self.servable.bucket_of(self.queue[0].payload)
-        batch: list[Request] = []
-        rest: deque[Request] = deque()
-        while self.queue:
-            req = self.queue.popleft()
-            if (len(batch) < self.max_batch
-                    and self.servable.bucket_of(req.payload) == bucket):
-                batch.append(req)
-            else:
-                rest.append(req)
-        self.queue = rest
         results = self.servable.run_batch([r.payload for r in batch])
         for req, res in zip(batch, results):
             req.result = res
@@ -462,17 +768,25 @@ class ServingEngine:
         return done
 
     def serve_stream(self, stream: Iterable, *,
-                     payload_of: Callable = None) -> dict:
+                     payload_of: Callable = None,
+                     deadline_us: float | Callable | None = None,
+                     priority_of: Callable = None) -> dict:
         """Replay ``stream`` — an iterable of ``(t_arrival, payload)`` (or
         longer tuples; extra fields are ignored) — under a virtual clock:
         requests are admitted when the clock passes their arrival time,
-        each batch advances the clock by its measured wall time, and an
-        empty queue fast-forwards to the next arrival. Returns latency /
-        throughput stats (p50/p99 in ms) merged with the servable's own
-        counters (plan-cache hit rate, trace counts, ...)."""
+        each batch advances the clock by its service time as measured on
+        the engine's injectable ``clock`` (a :class:`VirtualClock` makes
+        the whole replay deterministic), and an empty queue fast-forwards
+        to the next arrival. ``deadline_us`` (a scalar for every request,
+        or a callable ``item -> budget_us | None``) and ``priority_of``
+        (``item -> int``) attach scheduling metadata per arrival. Returns
+        latency / throughput / deadline stats (p50/p99 in ms) merged with
+        the servable's own counters (plan-cache and frame-tracker hit
+        rates, trace counts, ...)."""
         arrivals = deque(stream)
         clock = 0.0
         latencies: list[float] = []
+        submitted: list[Request] = []
         n_served = 0
         while arrivals or self.queue:
             if not self.queue and arrivals:
@@ -480,32 +794,49 @@ class ServingEngine:
             while arrivals and float(arrivals[0][0]) <= clock:
                 item = arrivals.popleft()
                 payload = item[1] if payload_of is None else payload_of(item)
-                self.submit(payload, t=float(item[0]))
-            t0 = time.monotonic()
+                d_us = (deadline_us(item) if callable(deadline_us)
+                        else deadline_us)
+                prio = 0 if priority_of is None else int(priority_of(item))
+                submitted.append(self.submit(
+                    payload, t=float(item[0]), deadline_us=d_us,
+                    priority=prio))
+            t0 = self.clock.monotonic()
             served = self.step(now=clock)
             if served:
                 # jax dispatch is asynchronous — a latency measurement
                 # must wait for the logits, not the dispatch
                 jax.block_until_ready([r.result for r in served])
-            dt = time.monotonic() - t0
+            dt = self.clock.monotonic() - t0
             clock += dt
             for req in served:
                 req.t_done = clock
                 latencies.append(req.latency)
+            if served:
+                self._record_service(
+                    self.servable.bucket_of(served[0].payload),
+                    len(served), dt)
             n_served += len(served)
         lat = (np.asarray(latencies, np.float64) if latencies
                else np.zeros(1))
+        deadlined = [r for r in submitted if r.deadline_us is not None]
+        misses = sum(r.missed for r in deadlined)
         stats = {"n_requests": n_served, "wall_s": clock,
                  "throughput_rps": n_served / max(clock, 1e-9),
                  "p50_ms": float(np.percentile(lat, 50)) * 1e3,
                  "p99_ms": float(np.percentile(lat, 99)) * 1e3,
-                 "mean_ms": float(lat.mean()) * 1e3}
+                 "mean_ms": float(lat.mean()) * 1e3,
+                 "scheduler": self.scheduler.name,
+                 "n_deadlined": len(deadlined),
+                 "n_deadline_misses": int(misses),
+                 "deadline_miss_rate":
+                     misses / len(deadlined) if deadlined else 0.0}
         stats.update(self.servable.stats())
         return stats
 
     def stats(self) -> dict:
         """Engine-side queue counters merged with the servable's."""
-        s = {"queued": len(self.queue), "completed": len(self.completed)}
+        s = {"queued": len(self.queue), "completed": len(self.completed),
+             "scheduler": self.scheduler.name}
         s.update(self.servable.stats())
         return s
 

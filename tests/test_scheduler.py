@@ -1,0 +1,662 @@
+"""Scheduler + frame-coherent reuse property layer (DESIGN.md §14).
+
+The invariants that silently break:
+
+- scheduling is a pure POLICY: under every scheduler x backend x
+  frame-reuse combination, served logits are bitwise-equal to the
+  per-request ``forward`` (the PR-7 bucketing-contract matrix with
+  scheduler as a new axis), and serve order is identical across
+  schedulers when deadlines are non-binding;
+- EDF semantics: earliest feasible deadline first, priority tiers,
+  FIFO within equal priority, a lost cause never delays a meetable
+  request, deadline-aware batch admission, and the aging starvation
+  bound (the oldest aged request is ALWAYS the head of the next batch);
+- frame reuse is bitwise-SAFE by construction (DevicePlan is pure
+  permutations, scattered back to index order), and the fast path never
+  fires across clouds whose plans differ at streaming jitter scales —
+  fuzzed against freshly built plans;
+- ``serve_stream`` on a VirtualClock is deterministic: p50/p99 and
+  deadline-miss rates pin to exact values (no wall-clock in the loop).
+
+Property tests run under hypothesis when installed, else the seeded
+fallback sweep (tests/_hypothesis_fallback.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # deterministic sweep, see _hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core.schedule import (FrameTracker, cloud_content_key,
+                                 frame_fingerprint)
+from repro.core.workload import PointNetConfig, SALayerSpec
+from repro.data.pointcloud import request_stream
+from repro.launch.serve import (EDFScheduler, FIFOScheduler,
+                                PointCloudServable, Request, SCHEDULERS,
+                                ServingEngine, ShapeBuckets, VirtualClock)
+from repro.models import pointnet2 as pn
+from repro.models.backend import compile_model
+
+
+def tiny_config(n=64):
+    return PointNetConfig(name="tiny-sched", n_points=n, layers=(
+        SALayerSpec(n_centers=24, n_neighbors=4, in_features=4,
+                    mlp=(4, 8, 8, 16)),
+        SALayerSpec(n_centers=8, n_neighbors=4, in_features=16,
+                    mlp=(16, 16, 16, 32)),
+    ))
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _drop_jit_caches_after_module():
+    """This module jits dozens of (backend x scheduler x reuse) variants;
+    drop the executables when it finishes so later test modules (the full
+    tier-1 run continues into test_serve.py et al.) start from the same
+    native compiler state they saw before this suite existed."""
+    yield
+    jax.clear_caches()
+
+
+@pytest.fixture(scope="module")
+def models():
+    """One compiled model per backend axis of the matrix."""
+    cfg = tiny_config()
+    params = pn.init_params(jax.random.PRNGKey(0), cfg, n_classes=10)
+    return {b: compile_model(params, cfg, backend=b, schedule="pointer")
+            for b in ("float", "reram-fused")}
+
+
+def _cloud(n, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, 3)).astype(np.float32)
+
+
+class FakeServable:
+    """Bucket by payload string length; 'run' is upper-casing — scheduler
+    semantics need no model."""
+    max_batch = 8
+
+    def bucket_of(self, payload):
+        return len(payload)
+
+    def run_batch(self, payloads):
+        return [p.upper() for p in payloads]
+
+    def stats(self):
+        return {}
+
+
+def _engine(scheduler, **kw):
+    return ServingEngine(FakeServable(), scheduler=scheduler, **kw)
+
+
+def _req(rid, t=0.0, deadline_us=None, priority=0, payload="aa"):
+    return Request(id=rid, payload=payload, t_arrival=t,
+                   deadline_us=deadline_us, priority=priority)
+
+
+# ---------------------------------------------------------------------------
+# VirtualClock
+# ---------------------------------------------------------------------------
+
+def test_virtual_clock_ticks_per_monotonic_call():
+    vc = VirtualClock(tick_s=0.25)
+    assert vc.monotonic() == 0.25
+    assert vc.monotonic() == 0.5
+    vc.advance(1.0)
+    assert vc.monotonic() == pytest.approx(1.75, abs=0)
+
+
+def test_virtual_clock_zero_tick_and_start():
+    vc = VirtualClock(start=3.0)
+    assert vc.monotonic() == 3.0 and vc.monotonic() == 3.0
+
+
+def test_virtual_clock_validation():
+    with pytest.raises(ValueError, match="tick_s"):
+        VirtualClock(tick_s=-1.0)
+    with pytest.raises(ValueError, match="dt"):
+        VirtualClock().advance(-0.1)
+
+
+# ---------------------------------------------------------------------------
+# scheduler semantics (no model)
+# ---------------------------------------------------------------------------
+
+def test_unknown_scheduler_name_raises():
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        _engine("nope")
+
+
+def test_registry_names_round_trip():
+    assert set(SCHEDULERS) == {"fifo", "edf"}
+    for name, cls in SCHEDULERS.items():
+        assert cls.name == name
+        assert _engine(name).scheduler.name == name
+
+
+def test_fifo_same_bucket_skim_preserves_other_buckets():
+    eng = _engine("fifo")
+    for i, p in enumerate(["aa", "bb", "ccc", "dd"]):
+        eng.submit(p, t=float(i))
+    batch = eng.step()
+    assert [r.payload for r in batch] == ["aa", "bb", "dd"]
+    assert [r.payload for r in eng.queue] == ["ccc"]  # kept its place
+
+
+def test_fifo_ignores_deadlines_and_priority():
+    eng = _engine("fifo", max_batch=1)
+    first = eng.submit("aa", t=0.0)
+    eng.submit("bb", t=0.0, deadline_us=1, priority=99)
+    assert eng.step()[0] is first
+
+
+def test_edf_earliest_deadline_first():
+    eng = _engine("edf", max_batch=1)
+    eng.submit("aa", t=0.0, deadline_us=100_000)
+    urgent = eng.submit("bb", t=0.0, deadline_us=500)
+    assert eng.step()[0] is urgent
+
+
+def test_edf_no_deadline_sorts_after_any_deadline():
+    eng = _engine("edf", max_batch=1)
+    free = eng.submit("aa", t=0.0)
+    dated = eng.submit("bb", t=0.0, deadline_us=900_000)
+    assert eng.step()[0] is dated
+    assert eng.step()[0] is free
+
+
+def test_edf_priority_beats_deadline():
+    eng = _engine("edf", max_batch=1)
+    eng.submit("aa", t=0.0, deadline_us=500)
+    vip = eng.submit("bb", t=0.0, priority=5)
+    assert eng.step()[0] is vip
+
+
+def test_edf_feasible_before_infeasible():
+    # est 1 ms: the 0.5 ms deadline is a lost cause and must not delay
+    # the meetable 100 ms one
+    eng = _engine("edf", max_batch=1)
+    eng.seed_service_estimate(2, 1e-3)
+    meetable = eng.submit("aa", t=0.0, deadline_us=100_000)
+    eng.submit("bb", t=0.0, deadline_us=500)
+    assert eng.step(now=0.0)[0] is meetable
+
+
+def test_edf_aging_escalates_past_priority():
+    eng = _engine(EDFScheduler(aging_s=1.0), max_batch=1)
+    old = eng.submit("aa", t=0.0)
+    eng.submit("bb", t=5.0, priority=99, deadline_us=10)
+    assert eng.step(now=5.0)[0] is old
+
+
+def test_edf_aging_disabled_with_none():
+    eng = _engine(EDFScheduler(aging_s=None), max_batch=1)
+    eng.submit("aa", t=0.0)                      # ancient, no deadline
+    vip = eng.submit("bb", t=1000.0, priority=1)
+    assert eng.step(now=1000.0)[0] is vip
+
+
+def test_edf_aging_validation():
+    with pytest.raises(ValueError, match="aging_s"):
+        EDFScheduler(aging_s=0.0)
+
+
+def test_edf_admission_skips_deadline_blowing_candidate():
+    # both meetable solo (1 ms) but a 2-batch takes 10 ms > 2 ms budget:
+    # the batch must stay at 1 and the second request keeps its slot
+    eng = _engine("edf")
+    eng.seed_service_estimate(2, 1e-3, batch_size=1)
+    eng.seed_service_estimate(2, 1e-2, batch_size=2)
+    eng.submit("aa", t=0.0, deadline_us=2_000)
+    eng.submit("bb", t=0.0, deadline_us=2_000)
+    assert len(eng.step(now=0.0)) == 1
+    assert len(eng.queue) == 1
+    assert len(eng.step(now=0.0)) == 1           # and it is served next
+
+
+def test_edf_admission_protects_admitted_head():
+    # head has the tight deadline; the relaxed candidate must not grow
+    # the batch past it
+    eng = _engine("edf")
+    eng.seed_service_estimate(2, 1e-3, batch_size=1)
+    eng.seed_service_estimate(2, 1e-2, batch_size=2)
+    tight = eng.submit("aa", t=0.0, deadline_us=2_000)
+    eng.submit("bb", t=0.0, deadline_us=500_000)
+    batch = eng.step(now=0.0)
+    assert batch == [tight]
+
+
+def test_edf_batches_when_deadlines_allow():
+    eng = _engine("edf")
+    eng.seed_service_estimate(2, 1e-3, batch_size=1)
+    eng.seed_service_estimate(2, 2e-3, batch_size=2)
+    eng.submit("aa", t=0.0, deadline_us=100_000)
+    eng.submit("bb", t=0.0, deadline_us=100_000)
+    assert len(eng.step(now=0.0)) == 2
+
+
+def test_oversized_payload_raises_before_queue_mutation(models):
+    servable = PointCloudServable(
+        models["float"], buckets=ShapeBuckets(points=(64,), batch=(1,)))
+    for sched in ("fifo", "edf"):
+        eng = ServingEngine(servable, scheduler=sched)
+        eng.submit(_cloud(65))
+        with pytest.raises(ValueError, match="exceeds"):
+            eng.step()
+        assert len(eng.queue) == 1               # nothing lost
+
+
+def test_queue_property_snapshots_arrival_order():
+    eng = _engine("edf")
+    a = eng.submit("aa", t=0.0, deadline_us=100)
+    b = eng.submit("bb", t=0.0, deadline_us=5)
+    assert eng.queue == (a, b)                   # arrival order, not EDF
+    assert len(eng.queue) == 2 and eng.stats()["queued"] == 2
+
+
+def test_service_estimate_lookup_rules():
+    eng = _engine("fifo")
+    assert eng.service_estimate("b", 1) == 0.0   # default
+    eng.seed_service_estimate("b", 2e-3, batch_size=2)
+    eng.seed_service_estimate("b", 5e-3, batch_size=4)
+    assert eng.service_estimate("b", 1) == 2e-3  # smallest size >= 1
+    assert eng.service_estimate("b", 3) == 5e-3
+    assert eng.service_estimate("b", 9) == 5e-3  # beyond largest: largest
+
+
+# ---------------------------------------------------------------------------
+# scheduler properties (random streams; hypothesis or the seeded sweep)
+# ---------------------------------------------------------------------------
+
+def _random_requests(rng, n):
+    reqs = []
+    t = 0.0
+    for i in range(n):
+        t += rng.random() * 0.01
+        dl = None if rng.random() < 0.3 else rng.random() * 20_000
+        reqs.append(_req(i, t=t, deadline_us=dl,
+                         priority=rng.randrange(3),
+                         payload="x" * (2 + rng.randrange(2))))
+    return reqs
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=1, max_value=20),
+       st.integers(min_value=0, max_value=2 ** 31))
+def test_property_no_loss_no_duplication(n, seed):
+    """Every pushed request is selected exactly once, under both
+    disciplines, for any arrival/deadline/priority stream."""
+    import random
+    rng = random.Random(seed)
+    for sched in (FIFOScheduler(), EDFScheduler(aging_s=0.05)):
+        served = []
+        reqs = _random_requests(rng, n)
+        for r in reqs:
+            sched.push(r)
+        now = reqs[-1].t_arrival
+        while len(sched):
+            batch = sched.select(bucket_of=len, max_batch=3, now=now,
+                                 est_service=lambda b, k: 1e-3)
+            assert batch, "non-empty queue must yield a batch"
+            assert len({len(r.payload) for r in batch}) == 1  # same-bucket
+            served.extend(batch)
+            now += 1e-3
+        assert sorted(r.id for r in served) == [r.id for r in reqs]
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=2, max_value=16),
+       st.integers(min_value=0, max_value=2 ** 31))
+def test_property_no_starvation_oldest_aged_heads_batch(n, seed):
+    """The starvation bound: whenever any pending request is aged, the
+    OLDEST aged request is the head of the very next selected batch —
+    regardless of every other request's priority or deadline."""
+    import random
+    rng = random.Random(seed)
+    sched = EDFScheduler(aging_s=0.01)
+    reqs = _random_requests(rng, n)
+    for r in reqs:
+        sched.push(r)
+    now = reqs[-1].t_arrival
+    while len(sched):
+        aged = [r for r in sched.pending()
+                if now - r.t_arrival >= sched.aging_s]
+        batch = sched.select(bucket_of=len, max_batch=2, now=now,
+                             est_service=lambda b, k: 1e-3)
+        if aged:
+            oldest = min(aged, key=lambda r: r.id)
+            assert batch[0] is oldest
+        now += 5e-3
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=1, max_value=16),
+       st.integers(min_value=0, max_value=2 ** 31),
+       st.booleans())
+def test_property_fifo_within_equal_priority(n, seed, with_deadline):
+    """Equal priority + equal (or absent) deadlines: EDF serves the exact
+    FIFO order — ties break on arrival id, never on queue internals."""
+    import random
+    rng = random.Random(seed)
+    edf, fifo = EDFScheduler(aging_s=None), FIFOScheduler()
+    dl = 50_000 if with_deadline else None
+    for i in range(n):
+        p = "x" * (2 + rng.randrange(2))         # two buckets
+        edf.push(_req(i, t=i * 1e-3, deadline_us=dl, payload=p))
+        fifo.push(_req(i, t=i * 1e-3, deadline_us=dl, payload=p))
+    edf_order, fifo_order = [], []
+    while len(edf):
+        edf_order.extend(r.id for r in edf.select(
+            bucket_of=len, max_batch=3, now=0.0))
+        fifo_order.extend(r.id for r in fifo.select(
+            bucket_of=len, max_batch=3, now=0.0))
+    assert edf_order == fifo_order
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=2, max_value=16),
+       st.integers(min_value=0, max_value=2 ** 31))
+def test_property_feasible_never_served_after_infeasible(n, seed):
+    """At a fixed instant, within one priority tier, every feasible-
+    deadline request is served before any infeasible one."""
+    import random
+    rng = random.Random(seed)
+    est = 5e-3                                  # 5 ms per serve
+    sched = EDFScheduler(aging_s=None)
+    for i in range(n):
+        dl = rng.random() * 20_000              # some < 5 ms: infeasible
+        sched.push(_req(i, t=0.0, deadline_us=dl, payload="aa"))
+    now, order = 0.0, []
+    while len(sched):
+        order.extend(sched.select(bucket_of=len, max_batch=1, now=now,
+                                  est_service=lambda b, k: est))
+    feas = [r.deadline >= now + est for r in order]
+    assert feas == sorted(feas, reverse=True)   # all True before any False
+
+
+# ---------------------------------------------------------------------------
+# the matrix: scheduler x backend x frame-reuse, bitwise vs forward
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["float", "reram-fused"])
+@pytest.mark.parametrize("scheduler", ["fifo", "edf"])
+@pytest.mark.parametrize("reuse", [False, True])
+def test_served_logits_bitwise_equal_matrix(models, backend, scheduler,
+                                            reuse):
+    """ISSUE acceptance: served logits bitwise-equal to the per-request
+    ``forward`` under every scheduler, backend and reuse setting."""
+    model = models[backend]
+    servable = PointCloudServable(
+        model, buckets=ShapeBuckets(points=(64,), batch=(1, 2)),
+        frame_reuse=FrameTracker(tol=1e-3) if reuse else False)
+    eng = ServingEngine(servable, scheduler=scheduler)
+    base = _cloud(64, seed=3)
+    clouds = [base + np.float32(1e-6 * i) for i in range(4)]
+    reqs = [eng.submit(c, t=i * 1e-3,
+                       deadline_us=10_000 if i % 2 else None)
+            for i, c in enumerate(clouds)]
+    eng.drain(now=0.1)
+    for req, cloud in zip(reqs, clouds):
+        ref = model.forward(jnp.asarray(cloud))
+        assert np.array_equal(np.asarray(req.result), np.asarray(ref)), \
+            (backend, scheduler, reuse, req.id)
+
+
+def test_differential_stream_logits_and_order(models):
+    """One coherent LiDAR stream through FIFO vs EDF x reuse on/off per
+    backend: identical logits AND identical serve order when deadlines
+    are non-binding (scheduler choice is a pure policy)."""
+    stream = list(request_stream(6, rate_hz=100.0, n_points=(64,), pool=3,
+                                 seed=1, mode="lidar"))
+    for backend in ("float", "reram-fused"):
+        runs = {}
+        for sched in ("fifo", "edf"):
+            for reuse in (False, True):
+                servable = PointCloudServable(
+                    models[backend],
+                    buckets=ShapeBuckets(points=(64,), batch=(1, 2)),
+                    frame_reuse=FrameTracker(tol=1e-3) if reuse else False)
+                eng = ServingEngine(servable, scheduler=sched,
+                                    clock=VirtualClock(tick_s=1e-4))
+                eng.serve_stream(stream, payload_of=lambda it: it[1],
+                                 deadline_us=10_000_000)  # never binds
+                order = [r.id for r in eng.completed]
+                logits = {r.id: np.asarray(r.result)
+                          for r in eng.completed}
+                runs[(sched, reuse)] = (order, logits)
+        ref_order, ref_logits = runs[("fifo", False)]
+        for key, (order, logits) in runs.items():
+            assert order == ref_order, (backend, key)
+            for rid in ref_logits:
+                assert np.array_equal(logits[rid], ref_logits[rid]), \
+                    (backend, key, rid)
+
+
+def test_frame_reuse_requires_plan_path(models):
+    with pytest.raises(ValueError, match="frame_reuse"):
+        PointCloudServable(models["float"], plan_cache=False,
+                           frame_reuse=True)
+
+
+def test_edf_beats_fifo_and_frame_hits_on_lidar(models):
+    """The acceptance scenario: overloaded coherent stream, every 3rd
+    frame urgent — EDF misses strictly fewer deadlines than FIFO, the
+    tracker's hit-rate exceeds 0.5, on a fully virtual clock."""
+    stream = list(request_stream(15, rate_hz=800.0, n_points=(64,),
+                                 pool=4, seed=0, mode="lidar"))
+
+    def replay(sched):
+        servable = PointCloudServable(
+            models["reram-fused"],
+            buckets=ShapeBuckets(points=(64,), batch=(1,)),
+            frame_reuse=FrameTracker(tol=1e-3))
+        eng = ServingEngine(servable, scheduler=sched, max_batch=1,
+                            clock=VirtualClock(tick_s=2e-3))
+        eng.seed_service_estimate(64, 2e-3)
+        return eng.serve_stream(
+            stream, payload_of=lambda it: it[1],
+            deadline_us=lambda it: 4_000 if it[2] % 3 == 0 else 100_000)
+
+    fifo, edf = replay("fifo"), replay("edf")
+    assert edf["deadline_miss_rate"] < fifo["deadline_miss_rate"]
+    assert fifo["deadline_miss_rate"] > 0          # deadlines really bind
+    assert edf["frame_tracker"]["hit_rate"] > 0.5
+    assert fifo["scheduler"] == "fifo" and edf["scheduler"] == "edf"
+
+
+def test_serve_stream_deterministic_pinned_percentiles(models):
+    """The virtual clock removes wall time from the stats entirely: two
+    replays agree to the bit, and the percentiles pin to exact values
+    (the regression row CI gates on)."""
+    stream = list(request_stream(12, rate_hz=800.0, n_points=(64,),
+                                 pool=4, seed=0, mode="lidar"))
+
+    def replay():
+        servable = PointCloudServable(
+            models["reram-fused"],
+            buckets=ShapeBuckets(points=(64,), batch=(1,)))
+        eng = ServingEngine(servable, scheduler="fifo", max_batch=1,
+                            clock=VirtualClock(tick_s=2e-3))
+        eng.seed_service_estimate(64, 2e-3)
+        return eng.serve_stream(
+            stream, payload_of=lambda it: it[1],
+            deadline_us=lambda it: 4_000 if it[2] % 3 == 0 else 100_000)
+
+    a, b = replay(), replay()
+    for k in ("p50_ms", "p99_ms", "mean_ms", "wall_s",
+              "deadline_miss_rate", "throughput_rps"):
+        assert a[k] == b[k], k
+    # pinned: 12 frames at 800 Hz vs 2 ms batches — pure arithmetic
+    assert a["p50_ms"] == pytest.approx(6.125, abs=1e-9)
+    assert a["p99_ms"] == pytest.approx(10.1675, abs=1e-9)
+    assert a["n_deadline_misses"] == 3 and a["n_deadlined"] == 12
+
+
+# ---------------------------------------------------------------------------
+# cloud_content_key / frame_fingerprint / FrameTracker fuzz
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=50))
+def test_fuzz_content_key_row_permutation_changes_key(seed):
+    """Row order IS plan-relevant (FPS starts at row 0): a permuted copy
+    must not collide."""
+    rng = np.random.default_rng(seed)
+    cloud = rng.normal(size=(32, 3)).astype(np.float32)
+    perm = rng.permutation(32)
+    while np.array_equal(perm, np.arange(32)):
+        perm = rng.permutation(32)
+    assert cloud_content_key(cloud) != cloud_content_key(cloud[perm])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=50),
+       st.integers(min_value=1, max_value=16))
+def test_fuzz_pad_rows_never_affect_key_or_fingerprint(seed, n_pad):
+    rng = np.random.default_rng(seed)
+    cloud = rng.normal(size=(32, 3)).astype(np.float32)
+    pad = rng.normal(size=(n_pad, 3)).astype(np.float32)  # arbitrary junk
+    padded = np.concatenate([cloud, pad], axis=0)
+    assert (cloud_content_key(padded, n_valid=32)
+            == cloud_content_key(cloud))
+    assert (frame_fingerprint(padded, n_valid=32)
+            == frame_fingerprint(cloud))
+
+
+def test_fingerprint_certifies_displacement_bound():
+    """Equal fingerprints on equal shapes mean every coordinate stayed in
+    its grid cell — so displacement < cell per axis by construction."""
+    rng = np.random.default_rng(7)
+    a = rng.normal(size=(64, 3))
+    cell = 1e-3
+    hits = 0
+    # small jitter (mostly hits) and large (mostly misses): the bound
+    # must hold on every hit, and hits must actually occur
+    for scale in (1e-3 * cell, 5 * cell):
+        for _ in range(25):
+            b = a + rng.uniform(-scale, scale, a.shape)
+            if frame_fingerprint(a, cell=cell) == frame_fingerprint(
+                    b, cell=cell):
+                hits += 1
+                assert np.max(np.abs(a - b)) < cell
+    assert hits > 0
+    with pytest.raises(ValueError, match="cell"):
+        frame_fingerprint(a, cell=0.0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.sampled_from([0, 1, 2, 3, 4, 5, 6, 7]))
+def test_fuzz_reuse_never_fires_when_plans_differ(models, seed):
+    """The reuse fast path across genuinely different clouds must miss;
+    when it hits (jitter within tol), the served plan must equal the
+    freshly built one bit for bit — verified, not assumed."""
+    cfg = tiny_config()
+    model = models["float"]
+    rng = np.random.default_rng(seed)
+    anchor_cloud = rng.normal(size=(64, 3)).astype(np.float32)
+    tracker = FrameTracker(tol=1e-6)
+    tracker.update(anchor_cloud,
+                   model.build_device_plan(jnp.asarray(anchor_cloud)))
+
+    # a different cloud (fresh draw, far beyond tol) must miss
+    other = rng.normal(size=(64, 3)).astype(np.float32)
+    assert tracker.lookup(other) is None
+
+    # tiny jitter within tol: must hit, and the anchor's plan must be
+    # bitwise the plan a fresh build would produce
+    near = anchor_cloud + np.float32(1e-7)
+    plan = tracker.lookup(near)
+    assert plan is not None
+    fresh = model.build_device_plan(jnp.asarray(near))
+    for layer in range(1, len(cfg.layers) + 1):   # order_of is 1-based
+        assert np.array_equal(np.asarray(plan.order_of(layer)),
+                              np.asarray(fresh.order_of(layer))), layer
+
+
+def test_reuse_is_bitwise_safe_even_across_different_clouds(models):
+    """The safety argument itself: force reuse across genuinely
+    DIFFERENT clouds (tol=10 accepts anything shape-compatible) — the
+    stale plan is a worse DMA ordering, but logits are order-invariant
+    in the plan, so served bits still equal the fresh forward."""
+    model = models["reram-fused"]
+    servable = PointCloudServable(
+        model, buckets=ShapeBuckets(points=(64,), batch=(1, 2)),
+        frame_reuse=FrameTracker(tol=10.0))
+    eng = ServingEngine(servable)
+    clouds = [_cloud(64, seed=s) for s in range(4)]   # unrelated clouds
+    reqs = [eng.submit(c) for c in clouds]
+    eng.drain()
+    assert servable.frame_tracker.frame_hits == 3     # reuse DID fire
+    for req, cloud in zip(reqs, clouds):
+        ref = model.forward(jnp.asarray(cloud))
+        assert np.array_equal(np.asarray(req.result), np.asarray(ref))
+
+
+def test_tracker_counters_and_reanchor():
+    tracker = FrameTracker(tol=1e-3)
+    a = _cloud(64, seed=0)
+    assert tracker.lookup(a) is None                  # no anchor yet
+    tracker.update(a, "plan-a")
+    assert tracker.lookup(a + np.float32(1e-5)) == "plan-a"
+    far = a + np.float32(1.0)
+    assert tracker.lookup(far) is None                # beyond tol
+    tracker.update(far, "plan-b")
+    assert tracker.lookup(far) == "plan-b"            # re-anchored
+    s = tracker.stats()
+    assert s["frame_hits"] == 2 and s["frame_misses"] == 2
+    assert s["reanchors"] == 2 and 0 < s["hit_rate"] < 1
+    tracker.clear()
+    assert tracker.lookup(far) is None
+
+
+def test_tracker_shape_and_dtype_mismatch_miss():
+    tracker = FrameTracker(tol=1e-3)
+    a = _cloud(64, seed=0)
+    tracker.update(a, "plan")
+    assert tracker.lookup(_cloud(48, seed=0)) is None
+    assert tracker.lookup(a.astype(np.float64)) is None
+    # trimmed view of a padded copy still hits
+    padded = np.concatenate([a, np.ones((8, 3), np.float32)])
+    assert tracker.lookup(padded, n_valid=64) == "plan"
+
+
+def test_tracker_validation():
+    with pytest.raises(ValueError, match="tol"):
+        FrameTracker(tol=0.0)
+    with pytest.raises(ValueError, match="cell"):
+        FrameTracker(tol=1e-3, cell=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# the LiDAR stream generator
+# ---------------------------------------------------------------------------
+
+def test_lidar_stream_periodic_bounded_and_coherent():
+    frames = list(request_stream(6, rate_hz=10.0, n_points=(64,), pool=4,
+                                 seed=0, mode="lidar"))
+    assert [f for _, _, f in frames] == list(range(6))
+    assert [t for t, _, _ in frames] == pytest.approx(
+        [i / 10.0 for i in range(6)])
+    for (_, a, _), (_, b, _) in zip(frames, frames[1:]):
+        assert a.shape == (64, 3) and a.dtype == np.float32
+        assert not np.array_equal(a, b)          # never bitwise-equal ...
+        assert np.max(np.abs(a - b)) < 1e-3      # ... but near-duplicate
+
+
+def test_lidar_stream_deterministic_and_pool_mode_untouched():
+    one = list(request_stream(4, n_points=(64,), seed=3, mode="lidar"))
+    two = list(request_stream(4, n_points=(64,), seed=3, mode="lidar"))
+    assert all(np.array_equal(a[1], b[1]) for a, b in zip(one, two))
+    pool = list(request_stream(4, n_points=(64,), seed=3))
+    assert pool[0][1].shape == (64, 3)           # default mode unchanged
+
+
+def test_lidar_stream_validation():
+    with pytest.raises(ValueError, match="mode"):
+        list(request_stream(1, mode="radar"))
+    with pytest.raises(ValueError, match="drift"):
+        list(request_stream(1, mode="lidar", drift=-1.0))
