@@ -181,6 +181,22 @@ True
 ...     .select_protection(grid).protection
 'ecc'
 
+**Static contract analysis** — the invariants above, machine-checked
+(``repro.analysis``, DESIGN.md §15): :func:`verify_contracts` lowers a
+compiled model to its jaxpr (and optionally optimized HLO) and asserts
+the declared launch/purity contracts — exactly ``n_layers`` gather
+launches, no host callbacks, no f64 creep, fused plans under the VMEM
+budget — while ``repro.analysis.lint`` checks the source tree for the
+bug classes this repo has actually shipped. ``tools/check_static.py``
+gates both in CI:
+
+>>> report = repro.verify_contracts(dp, clouds)
+>>> report.ok, report.info.gather_launches   # one gather per SA layer
+(True, 2)
+>>> from repro.analysis import lint_source
+>>> [f.rule for f in lint_source("import time\\nt = time.time()\\n")]
+['wall-clock']
+
 Everything else stays importable from its submodule (``repro.core``,
 ``repro.kernels``, ``repro.models``, ...); see README.md for the
 backend table and the paper-section → module map.
@@ -199,10 +215,12 @@ from repro.launch.serve import (EDFScheduler, FIFOScheduler, LMServable,
                                 VirtualClock)
 from repro.models.backend import (Backend, CompiledModel, available_backends,
                                   compile_model, register_backend)
+from repro import analysis
 from repro import reliability
+from repro.analysis import verify_contracts
 from repro.reliability import FaultModel
 
-__version__ = "0.9.0"
+__version__ = "0.10.0"
 
 __all__ = [
     "Backend",
@@ -229,6 +247,7 @@ __all__ = [
     "ServingEngine",
     "ShapeBuckets",
     "VirtualClock",
+    "analysis",
     "available_backends",
     "build_plan",
     "cloud_content_key",
@@ -236,5 +255,6 @@ __all__ = [
     "frame_fingerprint",
     "register_backend",
     "reliability",
+    "verify_contracts",
     "__version__",
 ]

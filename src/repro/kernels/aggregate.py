@@ -50,6 +50,7 @@ def aggregate_diff(features: jnp.ndarray, nbr_idx: jnp.ndarray,
     )
     return pl.pallas_call(
         _kernel,
+        name="aggregate_diff",
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, k, c), features.dtype),
         interpret=interpret,
@@ -98,6 +99,7 @@ def aggregate_diff_batched(features: jnp.ndarray, nbr_idx: jnp.ndarray,
     )
     return pl.pallas_call(
         _kernel_batched,
+        name="aggregate_diff_batched",
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, m, k, c), features.dtype),
         interpret=interpret,

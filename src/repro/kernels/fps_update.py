@@ -33,6 +33,7 @@ def fps_update(points_t: jnp.ndarray, centroid: jnp.ndarray,
     assert n % bn == 0, (n, bn)
     return pl.pallas_call(
         _kernel,
+        name="fps_update",
         grid=(n // bn,),
         in_specs=[
             pl.BlockSpec((3, bn), lambda i: (0, i)),

@@ -329,6 +329,7 @@ def _launch(x_p, sx, program: CrossbarProgram, *, mode: str, m_real: int,
     if mode == "wstat":
         return pl.pallas_call(
             functools.partial(_kernel_wstat, **common),
+            name="reram_mlp_fused_wstat",
             grid=(b, n_layers, n_steps, m_steps),
             in_specs=[
                 pl.BlockSpec((1, block_m, d),
@@ -358,6 +359,7 @@ def _launch(x_p, sx, program: CrossbarProgram, *, mode: str, m_real: int,
     if mode == "mtiled":
         return pl.pallas_call(
             functools.partial(_kernel_mtiled, **common),
+            name="reram_mlp_fused_mtiled",
             grid=(b, n_layers, m_steps, n_steps),
             in_specs=[
                 pl.BlockSpec((1, block_m, d),
@@ -388,6 +390,7 @@ def _launch(x_p, sx, program: CrossbarProgram, *, mode: str, m_real: int,
 
     return pl.pallas_call(
         functools.partial(_kernel, **common),
+        name="reram_mlp_fused_" + mode,
         grid=(b, n_layers, m_steps, n_steps),
         in_specs=[
             pl.BlockSpec((1, block_m, d), lambda bb, l, i, j: (bb, i, 0)),

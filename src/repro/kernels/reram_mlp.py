@@ -82,6 +82,7 @@ def reram_matmul_int(x_int: jnp.ndarray, planes: jnp.ndarray, *,
         weight_bits=weight_bits, k_steps=k_steps)
     return pl.pallas_call(
         kernel,
+        name="reram_matmul_int",
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),

@@ -142,7 +142,8 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
         cfg = dataclasses.replace(cfg, batch_axes=dp_axes, dp_shards=n_dp)
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
            "chips": chips, "ok": False, "tag": tag}
-    t0 = time.monotonic()
+    # this harness MEASURES compile wall-time; real clock is the point
+    t0 = time.monotonic()  # lint: allow-wall-clock
     try:
         with mesh:
             fn, args, in_sp, out_sp, donate = _steps_for(cfg, shape, mesh)
@@ -153,9 +154,9 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
                                if out_sp is not None else None),
                 donate_argnums=donate)
             lowered = jitted.lower(*args)
-            t_lower = time.monotonic() - t0
+            t_lower = time.monotonic() - t0  # lint: allow-wall-clock
             compiled = lowered.compile()
-            t_compile = time.monotonic() - t0 - t_lower
+            t_compile = time.monotonic() - t0 - t_lower  # lint: allow-wall-clock
             mem = _memory_dict(compiled)
             try:
                 cost_list = compiled.cost_analysis()
@@ -193,7 +194,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
     except Exception as e:
         rec.update(error=f"{type(e).__name__}: {e}",
                    traceback=traceback.format_exc()[-4000:])
-    rec["total_s"] = time.monotonic() - t0
+    rec["total_s"] = time.monotonic() - t0  # lint: allow-wall-clock
     with open(path, "w") as f:
         json.dump(rec, f, indent=1)
     return rec

@@ -14,10 +14,11 @@ On a 1000+-node deployment the coordinator composes these primitives:
 """
 from __future__ import annotations
 
-import random
 import signal
 import time
 from dataclasses import dataclass, field
+
+import numpy as np
 
 __all__ = ["GracefulShutdown", "StragglerWatchdog", "retry"]
 
@@ -46,10 +47,11 @@ class StragglerWatchdog:
     _t0: float | None = None
 
     def start_step(self):
-        self._t0 = time.monotonic()
+        # measuring real step duration is this class's whole job
+        self._t0 = time.monotonic()  # lint: allow-wall-clock
 
     def end_step(self, step: int) -> bool:
-        dt = time.monotonic() - self._t0
+        dt = time.monotonic() - self._t0  # lint: allow-wall-clock
         slow = self.ewma is not None and dt > self.threshold * self.ewma
         if slow:
             self.flagged_steps.append((step, dt, self.ewma))
@@ -62,12 +64,14 @@ class StragglerWatchdog:
 
     def observe(self, step: int, duration_s: float) -> bool:
         """Clock-free variant for tests."""
-        self._t0 = time.monotonic() - duration_s
+        self._t0 = time.monotonic() - duration_s  # lint: allow-wall-clock
         return self.end_step(step)
 
 
 def retry(fn, *args, attempts: int = 3, backoff_s: float = 0.1,
-          jitter_s: float = 0.0, exceptions=(OSError, IOError), **kwargs):
+          jitter_s: float = 0.0, exceptions=(OSError, IOError),
+          rng: np.random.Generator | None = None, sleep=time.sleep,
+          **kwargs):
     """Call ``fn`` up to ``attempts`` times with exponential backoff.
 
     ``attempts < 1`` raises ``ValueError`` (it used to fall through the
@@ -75,15 +79,23 @@ def retry(fn, *args, attempts: int = 3, backoff_s: float = 0.1,
     successful call returning ``None``). ``jitter_s`` adds a uniform
     random extra sleep in ``[0, jitter_s]`` per retry so a fleet of
     workers retrying the same failed resource doesn't thunder back in
-    lockstep."""
+    lockstep. The jitter draws from ``rng`` (any
+    ``numpy.random.Generator``; a fresh ``default_rng()`` per call when
+    omitted) so callers that need a reproducible backoff trajectory pass
+    ``rng=np.random.default_rng(seed)`` — this used to be module-level
+    ``random.uniform``, unseedable from outside. ``sleep=`` is
+    injectable for the same reason (tests assert the trajectory without
+    actually sleeping)."""
     if attempts < 1:
         raise ValueError(f"retry needs attempts >= 1, got {attempts}")
     if backoff_s < 0 or jitter_s < 0:
         raise ValueError("backoff_s and jitter_s must be >= 0")
+    if rng is None:
+        rng = np.random.default_rng()
     for i in range(attempts):
         try:
             return fn(*args, **kwargs)
         except exceptions:
             if i == attempts - 1:
                 raise
-            time.sleep(backoff_s * (2 ** i) + random.uniform(0.0, jitter_s))
+            sleep(backoff_s * (2 ** i) + float(rng.uniform(0.0, jitter_s)))

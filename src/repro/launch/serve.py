@@ -591,9 +591,13 @@ class LMServable(Servable):
 
     def __init__(self, params, cfg: ArchConfig, *, max_new_tokens: int = 32,
                  temperature: float = 0.0, key=None, image_embeds=None,
-                 max_batch: int = 8):
+                 max_batch: int = 8, clock=None):
         self.params = params
         self.cfg = cfg
+        # same injectable-clock contract as ServingEngine (the PR 9
+        # serve_stream bug class): anything with .monotonic(), e.g.
+        # VirtualClock, makes the timing stats deterministic under test
+        self.clock = clock if clock is not None else time
         self.max_new_tokens = int(max_new_tokens)
         self.temperature = float(temperature)
         self.key = key if key is not None else jax.random.PRNGKey(0)
@@ -617,11 +621,11 @@ class LMServable(Servable):
     def run_batch(self, payloads: list) -> list:
         prompts = jnp.stack([jnp.asarray(p, jnp.int32) for p in payloads])
         b, s = prompts.shape
-        t0 = time.monotonic()
+        t0 = self.clock.monotonic()
         logits, cache = _jit_prefill(self.cfg, s + self.max_new_tokens)(
             self.params, ids=prompts, image_embeds=self.image_embeds)
         jax.block_until_ready(logits)
-        t1 = time.monotonic()
+        t1 = self.clock.monotonic()
         step = _jit_step(self.cfg)
         self.key, key = jax.random.split(self.key)
         toks = [self._sample(logits, key)]
@@ -632,7 +636,7 @@ class LMServable(Servable):
                              image_embeds=self.image_embeds)
             toks.append(self._sample(lg, key))
         jax.block_until_ready(toks[-1])
-        t2 = time.monotonic()
+        t2 = self.clock.monotonic()
         self.prefill_s += t1 - t0
         self.decode_s += t2 - t1
         self.tokens += b * self.max_new_tokens

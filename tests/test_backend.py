@@ -22,7 +22,8 @@ import pytest
 
 import repro
 from repro import (MODE_PRESETS, CompiledModel, available_backends,
-                   build_plan, compile_model, register_backend)
+                   build_plan, compile_model, register_backend,
+                   verify_contracts)
 from repro.core import PointNetWorkload
 from repro.core.workload import PointNetConfig, SALayerSpec
 from repro.models import pointnet2 as pn
@@ -369,29 +370,22 @@ def test_batched_plan_driven_matches_per_cloud_loop_bitwise(setup, backend):
             (backend, sched)
 
 
-def test_batched_plan_issues_one_gather_launch_per_layer(setup, monkeypatch):
+def test_batched_plan_issues_one_gather_launch_per_layer(setup):
     """Acceptance: batched plan-driven execution issues exactly ONE
     batch-gridded ``aggregate_diff_batched`` pallas_call per SA layer for
     the whole batch — and never falls back to the per-cloud
-    ``aggregate_diff`` loop."""
+    ``aggregate_diff`` loop. Verified statically off the jaxpr via
+    ``analysis.verify_contracts`` (this used to monkeypatch the kernel
+    entry points and count calls)."""
     cfg, params, cloud = setup
     clouds = jnp.stack([cloud, cloud * 0.5, cloud * 2.0, cloud - 0.2])
-    batched_calls, single_calls = [], []
-    real_batched = backend_mod.aggregate_diff_batched
-    monkeypatch.setattr(
-        backend_mod, "aggregate_diff_batched",
-        lambda *a, **k: (batched_calls.append(a[1].shape),
-                         real_batched(*a, **k))[1])
-    monkeypatch.setattr(
-        backend_mod, "aggregate_diff",
-        lambda *a, **k: single_calls.append(a) or (_ for _ in ()).throw(
-            AssertionError("per-cloud gather in batched path")))
     m = compile_model(params, cfg, backend="reram-fused", schedule="pointer")
-    m.batched_forward(clouds)
-    assert len(batched_calls) == cfg.n_layers
-    assert not single_calls
+    report = verify_contracts(m, clouds).raise_if_violated()
+    launches = report.info.launches_of("gather-batched")
+    assert len(launches) == cfg.n_layers
+    assert report.info.launches_of("gather") == []
     # each launch carried the whole batch in its grid
-    assert all(shape[0] == 4 for shape in batched_calls)
+    assert all(rec.out_shape[0] == 4 for rec in launches)
 
 
 def test_batched_plan_caches_per_layer_aggregated_dma_stats(setup):
@@ -516,55 +510,40 @@ def test_device_planned_logits_match_host_planned(setup, backend, sched):
     assert np.array_equal(np.asarray(dev.jit_batched_forward(clouds)), bh)
 
 
-def test_device_planned_batched_forward_jits_without_host_transfers(
-        setup, monkeypatch):
+def test_device_planned_batched_forward_jits_without_host_transfers(setup):
     """Acceptance: planned ``batched_forward`` traces under jax.jit with
-    plan construction INSIDE the trace — no per-cloud Python loop and no
-    ``np.asarray`` host pull on geometry anywhere in the hot path
-    (monkeypatched to fail on any jax value)."""
+    plan construction INSIDE the trace — no per-cloud Python loop, no
+    host-callback primitive, and zero host geometry pulls. The contracts
+    are read off the jaxpr AND the optimized HLO by
+    ``analysis.verify_contracts`` (this used to monkeypatch np.asarray
+    to fail on any jax value — a host pull now surfaces as a
+    'traceable' or 'host-callbacks' violation instead)."""
     cfg, params, cloud = setup
     clouds = jnp.stack([cloud, cloud * 0.5])
     m = compile_model(params, cfg, schedule="pointer")
-    real_asarray = np.asarray
-
-    def guarded(x, *a, **k):
-        if isinstance(x, (jax.Array, jax.core.Tracer)):
-            raise AssertionError(
-                "np.asarray on a device value in the device-planned path")
-        return real_asarray(x, *a, **k)
-
-    monkeypatch.setattr(np, "asarray", guarded)
-    monkeypatch.setattr(backend_mod.np, "asarray", guarded)
-    eager = m.batched_forward(clouds)          # eager: still no host pull
+    report = verify_contracts(m, clouds, check_hlo=True).raise_if_violated()
+    assert report.info.host_callbacks == ()
+    assert report.hlo["host_custom_calls"] == 0
+    eager = m.batched_forward(clouds)
     jitted = jax.jit(m.batched_forward)(clouds)
-    monkeypatch.undo()
     assert np.array_equal(np.asarray(eager), np.asarray(jitted))
     nll, acc = m.eval_step(clouds, jnp.asarray([1, 7]))   # jitted path
     assert bool(jnp.isfinite(nll))
 
 
-def test_device_planned_batched_issues_one_gather_per_layer(
-        setup, monkeypatch):
+def test_device_planned_batched_issues_one_gather_per_layer(setup):
     """The traced path keeps the PR 5 launch discipline: exactly ONE
-    batch-gridded gather per SA layer, never the per-cloud kernel."""
+    batch-gridded gather per SA layer, never the per-cloud kernel —
+    counted off the jaxpr by ``analysis.verify_contracts``."""
     cfg, params, cloud = setup
     clouds = jnp.stack([cloud, cloud * 0.5, cloud * 2.0])
-    batched_calls, single_calls = [], []
-    real_batched = backend_mod.aggregate_diff_batched
-    monkeypatch.setattr(
-        backend_mod, "aggregate_diff_batched",
-        lambda *a, **k: (batched_calls.append(a[1].shape),
-                         real_batched(*a, **k))[1])
-    monkeypatch.setattr(
-        backend_mod, "aggregate_diff",
-        lambda *a, **k: single_calls.append(a) or (_ for _ in ()).throw(
-            AssertionError("per-cloud gather in batched path")))
     m = compile_model(params, cfg, schedule="pointer")
     assert m.device_planning
-    m.batched_forward(clouds)
-    assert len(batched_calls) == cfg.n_layers
-    assert not single_calls
-    assert all(shape[0] == 3 for shape in batched_calls)
+    report = verify_contracts(m, clouds).raise_if_violated()
+    launches = report.info.launches_of("gather-batched")
+    assert len(launches) == cfg.n_layers
+    assert report.info.launches_of("gather") == []
+    assert all(rec.out_shape[0] == 3 for rec in launches)
 
 
 def test_jit_forward_caches_and_matches(setup):

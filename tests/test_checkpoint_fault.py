@@ -105,6 +105,39 @@ def test_retry_recovers():
               attempts=2, backoff_s=0.001)
 
 
+def test_retry_jitter_deterministic_with_injected_rng():
+    """Regression for the pre-PR 10 unseeded-random lint finding at
+    launch/fault.py: retry's backoff jitter drew from module-global
+    random.uniform, so the sleep trajectory could not be reproduced.
+    With rng= injected, the exact trajectory is seeded: two runs with
+    the same seed sleep identically, a different seed diverges, and
+    every sleep is backoff * 2^i + jitter in [0, jitter_s]."""
+    def always_fails():
+        raise OSError("transient")
+
+    def trajectory(seed):
+        sleeps = []
+        with pytest.raises(OSError):
+            retry(always_fails, attempts=4, backoff_s=0.5, jitter_s=0.25,
+                  rng=np.random.default_rng(seed), sleep=sleeps.append)
+        return sleeps
+
+    a, b, c = trajectory(7), trajectory(7), trajectory(8)
+    assert len(a) == 3                       # attempts - 1 backoffs
+    assert a == b                            # seeded => reproducible
+    assert a != c                            # seed actually matters
+    for i, s in enumerate(a):
+        base = 0.5 * (2 ** i)
+        assert base <= s <= base + 0.25
+
+    # default path (no rng=) stays backward-compatible and in-bounds
+    sleeps = []
+    with pytest.raises(OSError):
+        retry(always_fails, attempts=3, backoff_s=0.1, jitter_s=0.0,
+              sleep=sleeps.append)
+    assert sleeps == [0.1, 0.2]              # zero jitter is exact
+
+
 def test_preemption_checkpoints_and_resumes(tmp_path):
     """End-to-end preemption: SIGTERM mid-training -> clean checkpoint;
     restart resumes from it (run in a subprocess)."""

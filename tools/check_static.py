@@ -1,0 +1,176 @@
+#!/usr/bin/env python
+"""CI gate for the static contract analyzer (``repro.analysis``).
+
+Runs both layers and fails (with ``--strict``) when either regresses:
+
+  1. **lint** — ``repro.analysis.lint`` over the given paths (default
+     ``src/``). Findings are compared against a committed baseline file
+     (``tools/static_baseline.json``): grandfathered findings are
+     reported but only FAIL when they grow — a new finding, or more
+     occurrences of an old one, under the same ``path::rule::snippet``
+     key (line numbers are excluded so pure moves don't churn the
+     baseline).
+  2. **trace contracts** — ``repro.analysis.verify_contracts`` on the
+     bench model configs: the model0 Table-1 config under the 'pointer'
+     schedule on the planned backends, forward + a small batch. Any
+     contract violation fails; there is no grandfathering for trace
+     contracts (the compiled pipeline either honors its launch/purity
+     contracts or it doesn't).
+
+Workflow when a grandfathered finding is genuinely intended to stay
+(e.g. the tracer-guarded host fallbacks in ``models/backend.py``):
+fix it, allowlist it with an inline ``# lint: allow-<rule>`` comment,
+or re-baseline with ``--update-baseline`` and justify the diff in
+review. See DESIGN.md §15.
+
+Usage:
+  PYTHONPATH=src python tools/check_static.py --strict
+  PYTHONPATH=src python tools/check_static.py --update-baseline
+  PYTHONPATH=src python tools/check_static.py --strict --hlo \
+      --json-out STATIC_report.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from collections import Counter
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__),
+                                "static_baseline.json")
+
+
+def _lint_phase(paths, baseline_path):
+    from repro.analysis import lint_paths
+
+    findings = lint_paths(paths)
+    counts = Counter(f.key for f in findings)
+    baseline = {}
+    if baseline_path and os.path.exists(baseline_path):
+        with open(baseline_path) as fh:
+            baseline = json.load(fh).get("lint", {})
+    new = {k: c for k, c in counts.items() if c > baseline.get(k, 0)}
+    grandfathered = {k: c for k, c in counts.items() if k not in new}
+    stale = sorted(k for k in baseline if k not in counts)
+    return {
+        "findings": [vars(f) for f in findings],
+        "counts": dict(counts),
+        "new": new,
+        "grandfathered": grandfathered,
+        "stale_baseline_keys": stale,
+    }
+
+
+def _bench_models(hlo: bool):
+    """(label, model, input) trace targets: the model0 bench config on
+    the planned backends — per-cloud forward and a 2-cloud batch."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import compile_model
+    from repro.core.workload import PAPER_MODELS
+    from repro.models import pointnet2 as pn
+
+    cfg = PAPER_MODELS["model0"]
+    params = pn.init_params(jax.random.PRNGKey(0), cfg, n_classes=40)
+    cloud = jnp.asarray(np.random.default_rng(0).normal(
+        size=(cfg.n_points, 3)), jnp.float32)
+    batch = jnp.stack([cloud, cloud[::-1]])
+    for backend in ("float", "reram-fused"):
+        model = compile_model(params, cfg, backend=backend,
+                              schedule="pointer", device_planning=True)
+        yield f"model0/{backend}/forward", model, cloud
+        yield f"model0/{backend}/batched", model, batch
+
+
+def _trace_phase(hlo: bool):
+    from repro.analysis import verify_contracts
+
+    out = {}
+    for label, model, x in _bench_models(hlo):
+        report = verify_contracts(model, x, check_hlo=hlo)
+        out[label] = report.summary()
+        print(f"  trace {label}: "
+              f"{'ok' if report.ok else 'VIOLATED'} "
+              f"(gathers={report.info.gather_launches if report.info else '-'}"
+              f"/{report.expected_gather_launches})")
+        for v in report.violations:
+            print(f"    {v}")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/dirs to lint (default: src/)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="grandfathered-findings file "
+                         "(default: tools/static_baseline.json)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from the current findings")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on new lint findings or any trace "
+                         "contract violation")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="lint only (skip compiling the bench models)")
+    ap.add_argument("--hlo", action="store_true",
+                    help="also compile the jitted pipelines and scan the "
+                         "optimized HLO (slower, checks the real artifact)")
+    ap.add_argument("--json-out", default=None,
+                    help="write the machine-readable report here")
+    args = ap.parse_args(argv)
+    paths = args.paths or ["src"]
+
+    report = {"lint": _lint_phase(paths, args.baseline)}
+    lint = report["lint"]
+    n_find = len(lint["findings"])
+    print(f"lint: {n_find} finding(s) over {', '.join(paths)} — "
+          f"{sum(lint['new'].values())} new, "
+          f"{sum(lint['grandfathered'].values())} grandfathered")
+    for f in lint["findings"]:
+        key = f"{f['path']}::{f['rule']}::{f['snippet']}"
+        tag = "NEW " if key in lint["new"] else "old "
+        print(f"  {tag}[{f['rule']}] {f['path']}:{f['line']}: "
+              f"{f['message']}")
+    if lint["stale_baseline_keys"]:
+        print(f"  note: {len(lint['stale_baseline_keys'])} baseline "
+              f"entr(ies) no longer fire — re-run --update-baseline to "
+              f"shrink the baseline")
+
+    if args.update_baseline:
+        with open(args.baseline, "w") as fh:
+            json.dump({"lint": dict(sorted(lint["counts"].items()))},
+                      fh, indent=1, sort_keys=True)
+            fh.write("\n")
+        print(f"baseline rewritten: {args.baseline} "
+              f"({len(lint['counts'])} key(s))")
+
+    violations = 0
+    if not args.no_trace:
+        print("trace contracts (bench model configs):")
+        report["trace"] = _trace_phase(args.hlo)
+        violations = sum(len(s["violations"])
+                         for s in report["trace"].values())
+
+    ok = not lint["new"] and violations == 0
+    report["ok"] = ok
+    if args.json_out:
+        with open(args.json_out, "w") as fh:
+            json.dump(report, fh, indent=1)
+        print(f"report written: {args.json_out}")
+
+    if not ok:
+        print(f"FAIL: {sum(lint['new'].values())} new lint finding(s), "
+              f"{violations} trace violation(s)")
+        return 1 if args.strict else 0
+    print("OK: no new lint findings, all trace contracts hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
